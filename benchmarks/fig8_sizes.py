@@ -1,0 +1,22 @@
+"""Paper Fig. 8: throughput vs (square) matrix size for the 13x4x6 design,
+under the zero-padding tiling model."""
+from repro.core.planner import ArrayConfig
+from repro.core import perf_model as pm
+
+SIZES = [256, 512, 1024, 2048, 4096, 8192, 16384]
+
+
+def rows():
+    out = []
+    cfg = ArrayConfig(13, 4, 6)
+    for prec, unit in (("fp32", "GFLOPs"), ("int8", "TOPs")):
+        peak = pm.design_throughput(cfg, prec)
+        pts = []
+        for s in SIZES:
+            t = pm.throughput_vs_size(s, cfg, prec)
+            pts.append(f"{s}:{t:.1f}")
+        out.append((f"fig8/{prec}_sweep", 0.0, "|".join(pts)))
+        t2k = pm.throughput_vs_size(2048, cfg, prec)
+        out.append((f"fig8/{prec}_2k_frac_of_peak", 0.0,
+                    f"{t2k / peak:.4f}"))
+    return out

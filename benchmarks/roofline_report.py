@@ -1,0 +1,37 @@
+"""Roofline report: aggregates the dry-run JSONs into per-cell terms.
+
+Emits one row per (arch x shape) single-pod cell with the three roofline
+terms, the dominant bottleneck, and the useful-FLOPs ratio."""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def records(mesh="single"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*_{mesh}.json"))):
+        d = json.load(open(f))
+        if d.get("ok") and not d.get("skipped"):
+            out.append(d)
+    return out
+
+
+def rows():
+    out = []
+    for d in records():
+        r = d["roofline"]
+        mem = d["memory"].get("total_per_device_bytes", 0) / 2 ** 30
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = (r["model_flops"] / 197e12) / bound if bound else 0.0
+        out.append((
+            f"roofline/{d['arch']}_{d['shape']}", 0.0,
+            f"compute_s={r['compute_s']:.3f};memory_s={r['memory_s']:.3f};"
+            f"collective_s={r['collective_s']:.3f};dom={r['dominant']};"
+            f"useful={r['useful_flops_ratio']:.3f};memGB={mem:.1f};"
+            f"roofline_frac={frac:.4f}"))
+    if not out:
+        out.append(("roofline/no_dryrun_data", 0.0,
+                    "run repro.launch.dryrun first"))
+    return out

@@ -1,0 +1,18 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import sys
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    from benchmarks import table1_kernels, table23_array, fig8_sizes, \
+        tpu_matmul, roofline_report
+
+    print("name,us_per_call,derived")
+    for mod in (table1_kernels, table23_array, fig8_sizes, tpu_matmul,
+                roofline_report):
+        for name, us, derived in mod.rows():
+            print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

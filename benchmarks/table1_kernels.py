@@ -1,0 +1,48 @@
+"""Paper Table I: single AIE kernel results (latency, throughput,
+efficiency) — reproduced from the analytical kernel model — plus a
+wall-clock microbench of our Pallas-kernel path on the same tile sizes."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import solve_aie_kernel_tiles
+from repro.core import perf_model as pm
+
+
+def _time_us(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows():
+    out = []
+    for prec in ("int8", "fp32"):
+        t = pm.kernel_tile(prec)
+        cyc = pm.matmul_kernel_cycles(t, prec)
+        eff = pm.matmul_kernel_efficiency(t, prec)
+        # wall-clock of our kernel path at the AIE tile size (XLA on CPU)
+        from repro.kernels import ops
+        dt = jnp.int8 if prec == "int8" else jnp.float32
+        a = jnp.ones((t.m, t.k), dt)
+        b = jnp.ones((t.k, t.n), dt)
+        us = _time_us(jax.jit(lambda a, b: ops.matmul(a, b, mode="xla")),
+                      a, b)
+        out.append((f"table1/matmul_{prec}_{t.m}x{t.k}x{t.n}", us,
+                    f"latency_cyc={cyc};eff={eff:.4f};paper_cyc="
+                    f"{1075 if prec == 'int8' else 4329}"))
+        acyc = pm.add_kernel_cycles(32, 32, prec)
+        aeff = pm.add_kernel_efficiency(32, 32, prec)
+        out.append((f"table1/add_{prec}_32x32", 0.0,
+                    f"latency_cyc={acyc};eff={aeff:.4f};paper_cyc="
+                    f"{164 if prec == 'int8' else 167}"))
+        # the optimizer's solution set (int8 must be unique 32x128x32)
+        tiles = solve_aie_kernel_tiles(prec)
+        out.append((f"table1/optimizer_solutions_{prec}", 0.0,
+                    "|".join(f"{x.m}x{x.k}x{x.n}" for x in tiles[:4])))
+    return out

@@ -1,0 +1,38 @@
+"""Wall-clock microbench of the planned matmul path on this host (XLA CPU
+stand-in; the Pallas path compiles natively on TPU).  us_per_call is real;
+'derived' reports the planner's block choice for each GEMM."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import plan_tpu_block
+from repro.kernels import ops
+
+SHAPES = [(512, 512, 512), (1024, 1024, 1024), (2048, 2048, 2048),
+          (4096, 512, 4096)]
+
+
+def _time_us(fn, *args, iters=5):
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows():
+    out = []
+    for m, k, n in SHAPES:
+        a = jnp.ones((m, k), jnp.bfloat16)
+        b = jnp.ones((k, n), jnp.bfloat16)
+        f = jax.jit(lambda a, b: ops.matmul(a, b, mode="xla"))
+        us = _time_us(f, a, b)
+        blk = plan_tpu_block(m, k, n, "bf16")
+        gflops = 2 * m * k * n / (us * 1e-6) / 1e9
+        out.append((f"tpu_matmul/{m}x{k}x{n}", us,
+                    f"host_gflops={gflops:.1f};planned_block="
+                    f"{blk.bm}x{blk.bk}x{blk.bn};vmem_kb="
+                    f"{blk.vmem_bytes // 1024}"))
+    return out

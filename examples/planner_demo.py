@@ -1,0 +1,40 @@
+"""Planner demo: reproduce the paper's evaluation tables from the
+analytical model, then show the TPU-mode plans for every assigned arch's
+dominant GEMMs.
+
+    PYTHONPATH=src python examples/planner_demo.py
+"""
+from repro.configs import ARCH_IDS, get_config
+from repro.core.planner import ArrayConfig, plan_tpu_matmul
+from repro.core import perf_model as pm
+
+
+def main():
+    print("== Table II (fp32) ==")
+    print(f"{'cfg':>10} {'ours':>10} {'paper':>10} {'err':>8}")
+    for xyz in [(13, 4, 6), (10, 3, 10), (11, 4, 7), (11, 3, 9),
+                (12, 4, 6), (12, 3, 8)]:
+        d = pm.evaluate_design(ArrayConfig(*xyz), "fp32")
+        paper = pm.PAPER_THROUGHPUT[("fp32", *xyz)]
+        print(f"{xyz[0]}x{xyz[1]}x{xyz[2]:>2} {d.throughput:>9.1f}G "
+              f"{paper:>9.1f}G {100 * (d.throughput / paper - 1):>+7.2f}%")
+
+    print("\n== Fig 8 (fp32, 13x4x6) ==")
+    for s in (256, 1024, 2048, 8192):
+        t = pm.throughput_vs_size(s, ArrayConfig(13, 4, 6), "fp32")
+        print(f"  {s:>6}^3: {t:8.1f} GFLOPs")
+
+    print("\n== TPU plans: FFN up-projection per assigned arch ==")
+    axes = {"data": 16, "model": 16}
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        if cfg.d_ff == 0:
+            continue
+        p = plan_tpu_matmul(4096 * 16, cfg.d_model, cfg.d_ff, "bf16", axes)
+        print(f"  {a:>24}: Y={p.shard.y_shards} Z={p.shard.z_shards} "
+              f"block={p.block.bm}x{p.block.bk}x{p.block.bn} "
+              f"sched={p.shard.schedule}")
+
+
+if __name__ == "__main__":
+    main()

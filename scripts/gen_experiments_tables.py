@@ -1,0 +1,65 @@
+"""Generate the EXPERIMENTS.md dry-run / roofline tables from the dry-run
+JSONs.  Usage: PYTHONPATH=src python scripts/gen_experiments_tables.py"""
+import glob
+import json
+import os
+
+DIR = "experiments/dryrun"
+
+
+def load(mesh):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(DIR, f"*_{mesh}.json"))):
+        d = json.load(open(f))
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def human(x):
+    for unit, div in (("P", 1e15), ("T", 1e12), ("G", 1e9), ("M", 1e6)):
+        if abs(x) >= div:
+            return f"{x / div:.2f}{unit}"
+    return f"{x:.0f}"
+
+
+def main():
+    single = load("single")
+    multi = load("multi")
+
+    print("### Dry-run matrix (per-device numbers)\n")
+    print("| arch | shape | mesh | HLO FLOPs | HBM bytes | wire bytes |"
+          " mem/dev | compile |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s), d in {**{(k, 'single'): v for k, v in single.items()},
+                      }.items():
+        pass
+    for mesh, table in (("single", single), ("multi", multi)):
+        for (a, s), d in table.items():
+            if d.get("skipped"):
+                print(f"| {a} | {s} | {mesh} | — | — | — | — | SKIP |")
+                continue
+            c = d["cost_analysis"]
+            mem = d["memory"].get("total_per_device_bytes", 0) / 2 ** 30
+            print(f"| {a} | {s} | {mesh} | {human(c['flops'])} |"
+                  f" {human(c['bytes accessed'])} |"
+                  f" {human(d['collectives']['total_wire_bytes'])} |"
+                  f" {mem:.1f}G | {d['compile_s']}s |")
+
+    print("\n### Roofline terms (single-pod, per device, seconds)\n")
+    print("| arch | shape | compute | memory | collective | dominant |"
+          " MODEL_FLOPS/HLO | roofline frac | mem/dev |")
+    print("|---|---|---|---|---|---|---|---|---|"[:-2])
+    for (a, s), d in single.items():
+        if d.get("skipped"):
+            continue
+        r = d["roofline"]
+        mem = d["memory"].get("total_per_device_bytes", 0) / 2 ** 30
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = (r["model_flops"] / 197e12) / bound if bound else 0
+        print(f"| {a} | {s} | {r['compute_s']:.3f} | {r['memory_s']:.3f} |"
+              f" {r['collective_s']:.3f} | {r['dominant']} |"
+              f" {r['useful_flops_ratio']:.2f} | {frac:.4f} | {mem:.1f}G |")
+
+
+if __name__ == "__main__":
+    main()

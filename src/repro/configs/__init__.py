@@ -1,0 +1,47 @@
+"""Architecture registry: ``--arch <id>`` resolves here."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell
+from repro.configs import (
+    granite_3_8b,
+    gemma3_12b,
+    gemma2_27b,
+    internlm2_1_8b,
+    paligemma_3b,
+    whisper_small,
+    xlstm_350m,
+    recurrentgemma_9b,
+    grok_1_314b,
+    llama4_scout_17b_a16e,
+)
+
+_MODULES = {
+    "granite-3-8b": granite_3_8b,
+    "gemma3-12b": gemma3_12b,
+    "gemma2-27b": gemma2_27b,
+    "internlm2-1.8b": internlm2_1_8b,
+    "paligemma-3b": paligemma_3b,
+    "whisper-small": whisper_small,
+    "xlstm-350m": xlstm_350m,
+    "recurrentgemma-9b": recurrentgemma_9b,
+    "grok-1-314b": grok_1_314b,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e,
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ArchConfig:
+    mod = _MODULES[arch_id]
+    return mod.SMOKE if smoke else mod.FULL
+
+
+def runnable_cells(arch_id: str) -> List[str]:
+    cfg = get_config(arch_id)
+    return [s for s in SHAPES if s not in cfg.skip_shapes]
+
+
+__all__ = ["ArchConfig", "ShapeCell", "SHAPES", "ARCH_IDS", "get_config",
+           "runnable_cells"]

@@ -1,0 +1,182 @@
+"""Architecture / shape-cell configuration schema."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+
+    # Block pattern, cycled over layers.  Entries: 'global', 'local',
+    # 'chunked', 'rglru', 'mlstm', 'slstm'.  MoE archs set moe=True and the
+    # FFN of every block becomes a routed MoE.
+    block_pattern: Tuple[str, ...] = ("global",)
+    window: int = 1024           # local/chunked attention window
+    attn_softcap: Optional[float] = None   # gemma2 attention logit softcap
+    final_softcap: Optional[float] = None  # gemma2 final logit softcap
+    rope_theta: float = 10_000.0
+    rope_theta_global: Optional[float] = None  # gemma3 dual-theta
+
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    moe_shared_expert: bool = False
+    capacity_factor: float = 1.25
+
+    # gated MLP (SwiGLU/GeGLU) vs plain
+    gated_mlp: bool = True
+
+    # encoder-decoder (whisper)
+    encdec: bool = False
+    n_enc_layers: int = 0
+    enc_frames: int = 1500
+
+    # VLM prefix (paligemma): number of (stubbed) patch-embedding tokens
+    prefix_tokens: int = 0
+
+    # recurrent widths
+    lru_width: Optional[int] = None     # RG-LRU state width
+    conv_width: int = 4
+
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+
+    # dtype / memory policy
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    opt_state_mode: str = "fp32"        # 'fp32' | 'int8'
+    fsdp_params: bool = False           # additionally shard params over data
+    seq_shard_activations: bool = True  # Megatron-SP residual stream
+    remat: str = "full"                 # 'none' | 'full'
+
+    # gradient-accumulation microbatches for train_4k (peak activation
+    # memory divides by this; grads accumulate in param-sharded buffers)
+    microbatches: int = 1
+    grad_accum_dtype: str = "float32"   # 'bfloat16' halves the buffers
+
+    # shape cells this arch skips (with the reason recorded in DESIGN.md)
+    skip_shapes: Tuple[str, ...] = ()
+
+    # --- derived -----------------------------------------------------------
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.hd
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.hd
+
+    def padded_vocab(self, multiple: int = 128) -> int:
+        return multiple * math.ceil(self.vocab / multiple)
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // self.pattern_period
+
+    @property
+    def tail_blocks(self) -> Tuple[str, ...]:
+        """Remainder layers when n_layers % pattern_period != 0 (e.g.
+        recurrentgemma's 38 layers with a period-3 pattern)."""
+        r = self.n_layers % self.pattern_period
+        return self.block_pattern[:r]
+
+    def param_count(self) -> int:
+        """Total parameters (exact for our param schema)."""
+        d, ff, v = self.d_model, self.d_ff, self.padded_vocab()
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += d * v
+        total += d  # final norm
+        for i in range(self.n_layers):
+            total += self._block_params(self.block_pattern[i % self.pattern_period])
+        if self.encdec:
+            for _ in range(self.n_enc_layers):
+                total += self._enc_block_params()
+        return total
+
+    def active_param_count(self) -> int:
+        """Active-per-token parameters (MoE: top_k + shared experts)."""
+        if not self.moe:
+            return self.param_count()
+        total = self.param_count()
+        n_mats = 3 if self.gated_mlp else 2
+        expert = n_mats * self.d_model * self.d_ff
+        dead = (self.n_experts - self.top_k) * expert * self.n_layers
+        if self.moe_shared_expert:
+            pass  # shared expert always active
+        return total - dead
+
+    def _attn_params(self) -> int:
+        d = self.d_model
+        return (d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d + d)
+
+    def _mlp_params(self) -> int:
+        n_mats = 3 if self.gated_mlp else 2
+        if self.moe:
+            e = self.n_experts * n_mats * self.d_model * self.d_ff
+            e += self.d_model * self.n_experts  # router
+            if self.moe_shared_expert:
+                e += n_mats * self.d_model * self.d_ff
+            return e
+        return n_mats * self.d_model * self.d_ff
+
+    def _block_params(self, btype: str) -> int:
+        d = self.d_model
+        if btype in ("global", "local", "chunked"):
+            return self._attn_params() + self._mlp_params() + d
+        if btype == "rglru":
+            w = self.lru_width or d
+            # in/out proj (x2 branches), conv, gates, + mlp
+            return (2 * d * w + w * d + self.conv_width * w + 3 * w
+                    + self._mlp_params() + 2 * d)
+        if btype == "mlstm":
+            # up 2x, q/k/v (width), o gate, down, conv, norms
+            w = 2 * d
+            return (d * 2 * w + 3 * w * w // 4 + w * d + self.conv_width * w
+                    + 4 * w + d)
+        if btype == "slstm":
+            w = d
+            return (4 * d * w + 4 * w + (4 * w * w) // max(1, self.n_heads)
+                    + self._mlp_params() + 2 * d)
+        raise ValueError(btype)
+
+    def _enc_block_params(self) -> int:
+        d = self.d_model
+        return self._attn_params() + 2 * d * self.d_ff + 2 * d
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,50 @@
+"""grok-1-314b [moe]: 64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072, MoE 8 experts top-2. [hf:xai-org/grok-1]
+
+Memory policy: bf16 params, int8 block-quantized Adam states, FSDP
+(params additionally sharded over the data axis) — the 314B-parameter
+memory-pressure case."""
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    vocab=131072,
+    block_pattern=("global",),
+    moe=True,
+    n_experts=8,
+    top_k=2,
+    gated_mlp=True,
+    param_dtype="bfloat16",
+    opt_state_mode="int8",
+    fsdp_params=True,
+    # pure full attention -> long_500k skipped (DESIGN.md).
+    skip_shapes=("long_500k",),
+    microbatches=8,
+    grad_accum_dtype="bfloat16",
+)
+
+SMOKE = ArchConfig(
+    name="grok-1-314b-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=256,
+    block_pattern=("global",),
+    moe=True,
+    n_experts=4,
+    top_k=2,
+    capacity_factor=8.0,
+    gated_mlp=True,
+    seq_shard_activations=False,
+)

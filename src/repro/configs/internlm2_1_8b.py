@@ -1,0 +1,35 @@
+"""internlm2-1.8b [dense]: 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544 — GQA. [arXiv:2403.17297]"""
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="internlm2-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=92544,
+    block_pattern=("global",),
+    gated_mlp=True,
+    # pure full attention -> long_500k skipped (DESIGN.md).
+    skip_shapes=("long_500k",),
+    microbatches=2,
+)
+
+SMOKE = ArchConfig(
+    name="internlm2-1.8b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    vocab=256,
+    block_pattern=("global",),
+    gated_mlp=True,
+    seq_shard_activations=False,
+)

@@ -1,0 +1,41 @@
+"""paligemma-3b [vlm]: 18L d_model=2048 8H (GQA kv=1) d_ff=16384
+vocab=257216 — SigLIP + gemma backbone. [arXiv:2407.07726]
+
+The SigLIP tower is a STUB per the assignment: ``input_specs()`` provides
+precomputed patch embeddings [B, 256, d_model]; the transformer backbone
+treats them as a bidirectional prefix (prefix-LM masking)."""
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="paligemma-3b",
+    family="vlm",
+    n_layers=18,
+    d_model=2048,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab=257216,
+    block_pattern=("global",),
+    prefix_tokens=256,
+    gated_mlp=True,
+    # pure full attention -> long_500k skipped (DESIGN.md).
+    skip_shapes=("long_500k",),
+    microbatches=2,
+)
+
+SMOKE = ArchConfig(
+    name="paligemma-3b-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab=256,
+    block_pattern=("global",),
+    prefix_tokens=8,
+    gated_mlp=True,
+    seq_shard_activations=False,
+)

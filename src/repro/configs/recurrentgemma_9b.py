@@ -1,0 +1,46 @@
+"""recurrentgemma-9b [hybrid]: 38L d_model=4096 16H (kv=1) d_ff=12288
+vocab=256000 — RG-LRU + local attention, 2 recurrent : 1 attention.
+[arXiv:2402.19427]
+
+38 layers with a period-3 pattern leaves a 2-block tail (rglru, rglru),
+handled unrolled outside the scanned groups."""
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab=256000,
+    block_pattern=("rglru", "rglru", "local"),
+    window=2048,
+    lru_width=4096,
+    conv_width=4,
+    gated_mlp=True,
+    param_dtype="bfloat16",
+    fsdp_params=True,
+    # RG-LRU state + windowed attention -> long_500k runs natively.
+    microbatches=4,
+)
+
+SMOKE = ArchConfig(
+    name="recurrentgemma-9b-smoke",
+    family="hybrid",
+    n_layers=5,   # 1 full group + (rglru, rglru) tail, like the real 38
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    vocab=256,
+    block_pattern=("rglru", "rglru", "local"),
+    window=16,
+    lru_width=64,
+    conv_width=4,
+    gated_mlp=True,
+    seq_shard_activations=False,
+)

@@ -1,0 +1,37 @@
+"""xlstm-350m [ssm]: 24L d_model=1024 4H d_ff=0 vocab=50304 — sLSTM +
+mLSTM blocks (7:1 mLSTM:sLSTM). [arXiv:2405.04517]
+
+d_ff=0: xLSTM blocks carry their own up/down projections (mLSTM expands
+2x internally); there is no separate FFN."""
+from repro.configs.base import ArchConfig
+
+FULL = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    n_layers=24,
+    d_model=1024,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=0,
+    vocab=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    gated_mlp=False,
+    # recurrent state -> long_500k runs (O(1) state per step).
+    microbatches=2,
+)
+
+SMOKE = ArchConfig(
+    name="xlstm-350m-smoke",
+    family="ssm",
+    n_layers=8,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=0,
+    vocab=256,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    gated_mlp=False,
+    seq_shard_activations=False,
+)

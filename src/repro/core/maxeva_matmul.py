@@ -1,0 +1,289 @@
+"""Sharded MaxEVA matmul: the paper's X x Y x Z array mapping on a TPU mesh.
+
+Terminology (paper §IV-A/B):
+  X — shards of the M dimension (activation rows). On TPU this is the
+      data-parallel sharding of the batch and is fixed by the mesh.
+  Y — shards of the contraction dimension K.  Partial products are reduced
+      *on the array* by the adder tree; here by ``psum``/``psum_scatter``
+      over Y-subgroups of the model axis (``axis_index_groups``).
+  Z — shards of the N dimension (output columns), i.e. column parallelism.
+  broadcast — A tiles are broadcast to their Z consumers; here the
+      activation is either already replicated over the model axis (the
+      in_spec performs the broadcast) or all-gathered over Z-subgroups when
+      it arrives K-sharded from the previous layer.
+
+The model axis of size ``model`` is factored as ``Y * Z = model`` with the
+device's model-axis index decomposed z-major: ``y = md % Y, z = md // Y``.
+
+Layout convention (makes consecutive layers compose with ZERO resharding):
+  * All K/N chunking is at ``model`` granularity: dimension D is split into
+    ``model`` chunks of D/model.
+  * Output: device ``md`` emits N-chunk ``md`` — natural order.
+  * K blocks are interleaved: Y-block ``y`` = chunks {c : c % Y == y}
+    (ordered by c).  Consequently a previous layer's natural-order output
+    (K-chunk md on device md) is exactly what the z-subgroup all-gather
+    assembles for this layer's Y-block — the neighbour-memory-sharing
+    analogue: data is already where the next kernel needs it.
+  * Weights are stored pre-sharded in "xyz layout" ``[model, K/Y, N/Z]``
+    (sharded on dim 0), the analogue of MaxEVA pinning each kernel's
+    buffers at compile time.
+
+Reduction schedules (placement-pattern analogues, §IV-D):
+  'allreduce'       — P1 analogue: one heavy reduction; every y-replica
+                      materializes the full N/Z block, then keeps its slice.
+  'reduce_scatter'  — P2 analogue: strictly fewer wire bytes ((Y-1)/Y vs
+                      2(Y-1)/Y) and the output lands pre-sliced.
+  'ring'            — beyond-paper: chunked ring reduce-scatter built from
+                      ppermute so XLA can overlap each hop with the next
+                      partial-GEMM chunk (collective matmul).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.sharding import dp_axes, model_size
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass(frozen=True)
+class XYZConfig:
+    """Per-GEMM plan consumed by ``xyz_matmul``."""
+
+    y: int = 1                        # K shards (adder-tree width)
+    schedule: str = "reduce_scatter"  # 'allreduce' | 'reduce_scatter' | 'ring'
+    x_layout: str = "replicated"      # 'replicated' (broadcast) | 'ksharded'
+    out_dtype: Optional[jnp.dtype] = None
+
+    def z(self, model: int) -> int:
+        assert model % self.y == 0, (model, self.y)
+        return model // self.y
+
+
+def _y_groups(model: int, y: int) -> Optional[Sequence[Sequence[int]]]:
+    """Devices sharing z (the adder-tree groups): [[z*Y+y for y] for z]."""
+    if y == model:
+        return None  # full-axis collective
+    z = model // y
+    return [[zz * y + yy for yy in range(y)] for zz in range(z)]
+
+
+def _z_groups(model: int, y: int) -> Optional[Sequence[Sequence[int]]]:
+    """Devices sharing y (the broadcast groups): [[z*Y+y for z] for y]."""
+    z = model // y
+    if z == model:
+        return None
+    return [[zz * y + yy for zz in range(z)] for yy in range(y)]
+
+
+def shard_weight_xyz(w: jnp.ndarray, model: int, y: int) -> jnp.ndarray:
+    """Repack a [K, N] weight into xyz layout [model, K/Y, N/Z].
+
+    Device md = z*Y+y holds K-chunks {c : c % Y == y} (ordered) of the
+    contiguous N-block z."""
+    k, n = w.shape
+    z = model // y
+    assert k % model == 0 and n % z == 0, (w.shape, model, y)
+    # (kz, ky, krow, nz, ncol): K-chunk c = kz*Y + ky
+    w5 = w.reshape(z, y, k // model, z, n // z)
+    # device md = nz*Y + ky  ->  [:, ky, :, nz, :]
+    w_dev = jnp.transpose(w5, (3, 1, 0, 2, 4))  # (nz, ky, kz, krow, ncol)
+    return w_dev.reshape(model, k // y, n // z)
+
+
+def unshard_weight_xyz(w_xyz: jnp.ndarray, y: int) -> jnp.ndarray:
+    """Inverse of ``shard_weight_xyz`` (checkpoints / elastic resharding)."""
+    model, ky_rows, ncol = w_xyz.shape
+    z = model // y
+    k = ky_rows * y
+    w_dev = w_xyz.reshape(z, y, z, k // model, ncol)   # (nz, ky, kz, krow, ncol)
+    w5 = jnp.transpose(w_dev, (2, 1, 3, 0, 4))         # (kz, ky, krow, nz, ncol)
+    return w5.reshape(k, z * ncol)
+
+
+def xyz_weight_shape(k: int, n: int, model: int, y: int) -> Tuple[int, int, int]:
+    return (model, k // y, n // (model // y))
+
+
+def _slice_k_block(x2: jnp.ndarray, yid, y: int, model: int) -> jnp.ndarray:
+    """From replicated x [rows, K], extract the interleaved Y-block ``yid``:
+    K-chunks {c : c % Y == yid}, ordered by c."""
+    if y == 1:
+        return x2
+    rows, k = x2.shape
+    z = model // y
+    x4 = x2.reshape(rows, z, y, k // model)   # chunk c = kz*Y + ky
+    xb = jax.lax.dynamic_index_in_dim(x4, yid, axis=2, keepdims=False)
+    return xb.reshape(rows, k // y)
+
+
+def _local_matmul(x2d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return kops.matmul(x2d, w, out_dtype=jnp.float32)
+
+
+def _ring_reduce_scatter(partial: jnp.ndarray, axis: str, groups,
+                         y: int) -> jnp.ndarray:
+    """Chunked ring reduce-scatter over the y-subgroup via ppermute.
+
+    ``partial`` is [rows, Nz]; returns [rows, Nz/Y] — the device's y-chunk,
+    matching psum_scatter(..., tiled=True).  Chunk c starts at device
+    position c+1, walks the ring accumulating, lands at position c.
+    """
+    md = jax.lax.axis_index(axis)
+    yid = jax.lax.rem(md, y)
+    nz = partial.shape[-1]
+    chunk = nz // y
+    chunks = jnp.stack(
+        [jax.lax.dynamic_slice_in_dim(partial, c * chunk, chunk, axis=-1)
+         for c in range(y)],
+        axis=0,
+    )  # [y, rows, chunk]
+
+    if groups is None:
+        pairs = [(i, (i + 1) % y) for i in range(y)]
+    else:
+        pairs = []
+        for g in groups:
+            for i, src in enumerate(g):
+                pairs.append((src, g[(i + 1) % len(g)]))
+
+    def take(idx):
+        return jax.lax.dynamic_index_in_dim(chunks, idx, axis=0,
+                                            keepdims=False)
+
+    acc = take(jax.lax.rem(yid + y - 1, y))
+    for step in range(1, y):
+        acc = jax.lax.ppermute(acc, axis, pairs)
+        acc = acc + take(jax.lax.rem(yid + 2 * y - 1 - step, y))
+    return acc
+
+
+def _shard_map(body, mesh, in_specs, out_specs):
+    try:
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    except TypeError:  # older spelling
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_rep=False)
+
+
+def xyz_matmul(
+    x: jnp.ndarray,
+    w_xyz: jnp.ndarray,
+    *,
+    mesh: Mesh,
+    cfg: XYZConfig,
+    batch_sharded: bool = True,
+) -> jnp.ndarray:
+    """out[..., N] = x[..., K] @ W, distributed per the XYZ plan.
+
+    ``w_xyz`` is in xyz layout ([model, K/Y, N/Z], sharded on dim 0).
+    Output is N-sharded over the model axis in natural chunk order; ``x``
+    is row-sharded over the data axes (X) and either replicated over model
+    ('replicated' — the broadcast) or K-sharded in natural order
+    ('ksharded' — a previous layer's output).
+    """
+    model = model_size(mesh)
+    if model == 1:
+        w = unshard_weight_xyz(w_xyz, cfg.y)
+        lead = x.shape[:-1]
+        out = _local_matmul(x.reshape(-1, x.shape[-1]), w)
+        return out.astype(cfg.out_dtype or x.dtype).reshape(*lead, -1)
+
+    y, z = cfg.y, cfg.z(model)
+    from repro.core.sharding import row_axes
+    row_spec = row_axes(mesh, x.shape[0]) if batch_sharded else None
+    mid = [None] * (x.ndim - 2)
+
+    x_spec = P(row_spec, *mid,
+               "model" if cfg.x_layout == "ksharded" else None)
+    out_spec = P(row_spec, *mid, "model")
+
+    ygroups = _y_groups(model, y)
+    zgroups = _z_groups(model, y)
+
+    def body(xl, wl):
+        wl = wl[0]  # [K/Y, N/Z]
+        md = jax.lax.axis_index("model")
+        yid = jax.lax.rem(md, y)
+        lead = xl.shape[:-1]
+        x2 = xl.reshape(-1, xl.shape[-1])
+
+        if cfg.x_layout == "replicated":
+            x2 = _slice_k_block(x2, yid, y, model)
+        elif z > 1:
+            # assemble the Y-block from natural-order K shards: gather over
+            # the z-subgroup concatenates chunks {y, Y+y, ...} in order —
+            # exactly the interleaved block the weight layout expects.
+            x2 = jax.lax.all_gather(x2, "model", axis_index_groups=zgroups,
+                                    axis=1, tiled=True)
+
+        # cast to the output dtype BEFORE the reduction: the collective's
+        # wire format (and its AD transpose buffers) stay 16-bit; XLA's
+        # all-reduce promotion still accumulates in fp32 internally.
+        partial = _local_matmul(x2, wl).astype(cfg.out_dtype or x.dtype)
+
+        nz = wl.shape[-1]
+        if y == 1:
+            out = partial
+        elif cfg.schedule == "allreduce":
+            red = jax.lax.psum(partial, "model", axis_index_groups=ygroups)
+            out = jax.lax.dynamic_slice_in_dim(red, yid * (nz // y), nz // y,
+                                               axis=-1)
+        elif cfg.schedule == "reduce_scatter":
+            out = jax.lax.psum_scatter(
+                partial, "model", scatter_dimension=partial.ndim - 1,
+                axis_index_groups=ygroups, tiled=True)
+        elif cfg.schedule == "ring":
+            out = _ring_reduce_scatter(partial, "model", ygroups, y)
+        else:
+            raise ValueError(cfg.schedule)
+
+        out = out.astype(cfg.out_dtype or x.dtype)
+        return out.reshape(*lead, -1)
+
+    return _shard_map(body, mesh, (x_spec, P("model", None, None)),
+                      out_spec)(x, w_xyz)
+
+
+def xyz_matmul_replicated_out(
+    x: jnp.ndarray,
+    w_xyz: jnp.ndarray,
+    *,
+    mesh: Mesh,
+    cfg: XYZConfig,
+    batch_sharded: bool = True,
+) -> jnp.ndarray:
+    """Row-parallel variant with fully replicated (over model) output:
+    Y = model, Z = 1, one psum/ring-allreduce — the classic Megatron
+    down-projection.  Used when the next op needs the full feature
+    dimension on every device (residual adds on replicated activations)."""
+    model = model_size(mesh)
+    if model == 1:
+        return xyz_matmul(x, w_xyz, mesh=mesh, cfg=cfg,
+                          batch_sharded=batch_sharded)
+    assert cfg.y == model, "replicated-out requires Y == model"
+    from repro.core.sharding import row_axes
+    row_spec = row_axes(mesh, x.shape[0]) if batch_sharded else None
+    mid = [None] * (x.ndim - 2)
+    x_spec = P(row_spec, *mid,
+               "model" if cfg.x_layout == "ksharded" else None)
+    out_spec = P(row_spec, *mid, None)
+
+    def body(xl, wl):
+        wl = wl[0]
+        md = jax.lax.axis_index("model")
+        lead = xl.shape[:-1]
+        x2 = xl.reshape(-1, xl.shape[-1])
+        if cfg.x_layout == "replicated":
+            x2 = _slice_k_block(x2, md, model, model)
+        partial = _local_matmul(x2, wl).astype(cfg.out_dtype or x.dtype)
+        out = jax.lax.psum(partial, "model")
+        return out.reshape(*lead, -1)
+
+    return _shard_map(body, mesh, (x_spec, P("model", None, None)),
+                      out_spec)(x, w_xyz)

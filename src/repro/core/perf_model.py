@@ -1,0 +1,248 @@
+"""Analytical performance/power model reproducing the paper's evaluation.
+
+The model is calibrated exactly the way the paper calibrates its own
+analytical optimization (§IV-C, §V): single-kernel latencies anchor to the
+AIE-simulator measurements of Table I; the array-level efficiency is a
+per-(precision, placement-pattern) constant fitted once to the simulator
+results (the paper attributes the array-level loss to lock/stream overhead
+and PnR buffer decisions — §V-B3); core power is linear in the number of
+MatMul-kernel cores and adder-tree cores (exact to <0.4% on all 12
+reported rows); memory banks / memory power are PnR+XPE measurements and
+are kept as per-config lookups for the reported rows.
+
+Everything here is validated against the paper in
+``tests/test_perf_model.py`` and surfaced in ``benchmarks/table*.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional
+
+from repro.core.device_model import AIE_VC1902, AIEDevice
+from repro.core.planner import ArrayConfig, KernelTile
+
+# ---------------------------------------------------------------------------
+# Single-kernel latency model (anchored to Table I)
+# ---------------------------------------------------------------------------
+
+# Fixed pipeline fill / loop-setup overhead cycles, calibrated on Table I.
+_MATMUL_OVERHEAD_CYC = {"int8": 51, "fp32": 233}
+_ADD_OVERHEAD_CYC = {"int8": 36, "fp32": 39}
+_ADD_PEAK_OPS = 8  # vector add lanes counted as "MACs/cyc" in Table I
+
+
+def matmul_kernel_cycles(tile: KernelTile, precision: str,
+                         device: AIEDevice = AIE_VC1902) -> int:
+    ideal = tile.macs / device.peak_macs[precision]
+    return int(round(ideal + _MATMUL_OVERHEAD_CYC[precision]))
+
+
+def matmul_kernel_efficiency(tile: KernelTile, precision: str,
+                             device: AIEDevice = AIE_VC1902) -> float:
+    cyc = matmul_kernel_cycles(tile, precision, device)
+    return (tile.macs / cyc) / device.peak_macs[precision]
+
+
+def add_kernel_cycles(m: int, n: int, precision: str) -> int:
+    return int(round(m * n / _ADD_PEAK_OPS + _ADD_OVERHEAD_CYC[precision]))
+
+
+def add_kernel_efficiency(m: int, n: int, precision: str) -> float:
+    return (m * n / add_kernel_cycles(m, n, precision)) / _ADD_PEAK_OPS
+
+
+def adder_tree_cycles(y: int, m: int, n: int, precision: str) -> int:
+    """(Y-1) sequential Add kernels on one AIE core (paper §IV-B)."""
+    return (y - 1) * add_kernel_cycles(m, n, precision)
+
+
+# ---------------------------------------------------------------------------
+# Array-level throughput model (anchored to Tables II/III)
+# ---------------------------------------------------------------------------
+
+# Array efficiency: fraction of aggregate single-kernel throughput realized
+# by the full-array design.  Fitted per (precision, pattern); the paper's
+# six reported configs deviate from these means by <0.6%.
+_ARRAY_EFF = {
+    ("fp32", "P1"): 0.92462,
+    ("fp32", "P2"): 0.95617,
+    ("int8", "P1"): 0.80912,
+    ("int8", "P2"): 0.82914,
+}
+
+# Core power: watts per MatMul-kernel core and per adder-tree core, fitted
+# on Tables II/III (fp32 max error 0.27%, int8 max error 0.32%).
+_CORE_POWER_W = {
+    "fp32": {"matmul": 0.072636, "adder": 0.037917},
+    "int8": {"matmul": 0.150096, "adder": 0.023333},
+}
+
+# PnR/XPE measurements for the paper's reported configs: (precision, X, Y, Z)
+# -> (memory_banks, dma_banks, memory_power_W).  These come from the AIE
+# place-and-route + XPE tools and are not analytically derivable.
+_REPORTED_MEMORY = {
+    ("fp32", 13, 4, 6): (3138, 18, 18.21),
+    ("fp32", 10, 3, 10): (3190, 0, 19.12),
+    ("fp32", 11, 4, 7): (3106, 18, 18.65),
+    ("fp32", 11, 3, 9): (3176, 0, 18.78),
+    ("fp32", 12, 4, 6): (2934, 16, 16.91),
+    ("fp32", 12, 3, 8): (3092, 0, 17.60),
+    ("int8", 13, 4, 6): (3112, 18, 18.18),
+    ("int8", 10, 3, 10): (3194, 0, 19.08),
+    ("int8", 11, 4, 7): (3096, 18, 18.62),
+    ("int8", 11, 3, 9): (3178, 0, 18.79),
+    ("int8", 12, 4, 6): (2918, 16, 16.98),
+    ("int8", 12, 3, 8): (3080, 0, 17.53),
+}
+
+# Paper-reported throughput rows (ground truth for validation).
+PAPER_THROUGHPUT = {
+    ("fp32", 13, 4, 6): 5442.11,  # GFLOPs
+    ("fp32", 10, 3, 10): 5405.33,
+    ("fp32", 11, 4, 7): 5414.39,
+    ("fp32", 11, 3, 9): 5382.27,
+    ("fp32", 12, 4, 6): 5031.19,
+    ("fp32", 12, 3, 8): 5225.05,
+    ("int8", 13, 4, 6): 77.01,    # TOPs
+    ("int8", 10, 3, 10): 76.08,
+    ("int8", 11, 4, 7): 75.67,
+    ("int8", 11, 3, 9): 74.66,
+    ("int8", 12, 4, 6): 71.25,
+    ("int8", 12, 3, 8): 72.93,
+}
+
+PAPER_TOTAL_POWER_W = {
+    ("fp32", 13, 4, 6): 43.83,
+    ("fp32", 10, 3, 10): 44.66,
+    ("fp32", 11, 4, 7): 44.01,
+    ("fp32", 11, 3, 9): 44.13,
+    ("fp32", 12, 4, 6): 40.68,
+    ("fp32", 12, 3, 8): 42.28,
+    ("int8", 13, 4, 6): 66.83,
+    ("int8", 10, 3, 10): 65.52,
+    ("int8", 11, 4, 7): 66.79,
+    ("int8", 11, 3, 9): 65.83,
+    ("int8", 12, 4, 6): 62.13,
+    ("int8", 12, 3, 8): 63.24,
+}
+
+# State-of-the-art CHARM [19], [34] reference points (paper §V-B).
+CHARM = {
+    "fp32": {
+        "throughput_gflops": 4504.46,
+        "power_w": 43.69,
+        "energy_eff": 103.10,
+        "matmul_kernels": 384,
+        "cores": 384,
+        "memory_banks": 3086,
+        "plios": 80,
+    },
+    "int8": {
+        # 28.15 TOPs reported at 1 GHz in [34]; scaled to 1.25 GHz (§V-B2).
+        "throughput_tops_1ghz": 28.15,
+        "throughput_tops": 28.15 * 1.25,
+        "cores": 192,
+    },
+    "mlp_fp32": {
+        # §V-B4: MLP inference, CHARM scaled to 1.25 GHz vs MaxEVA.
+        "charm_gflops": 3670.88,
+        "maxeva_gflops": 4735.94,
+    },
+}
+
+_TILES = {
+    "int8": KernelTile(32, 128, 32, 32 * 128 * 32, 12288),
+    "fp32": KernelTile(32, 32, 32, 32 * 32 * 32, 12288),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignPoint:
+    precision: str
+    cfg: ArrayConfig
+    tile: KernelTile
+    throughput: float            # GFLOPs for fp32, TOPs for int8
+    core_power_w: float
+    memory_power_w: Optional[float]
+    total_power_w: Optional[float]
+    energy_eff: Optional[float]  # GFLOPs/W or TOPs/W
+    memory_banks: Optional[int]
+    dma_banks: int
+    plios: int
+
+
+def kernel_tile(precision: str) -> KernelTile:
+    return _TILES[precision]
+
+
+def design_throughput(cfg: ArrayConfig, precision: str,
+                      device: AIEDevice = AIE_VC1902,
+                      tile: Optional[KernelTile] = None) -> float:
+    """Array throughput in GFLOPs (fp32) / TOPs (int8)."""
+    tile = tile or _TILES[precision]
+    cyc = matmul_kernel_cycles(tile, precision, device)
+    per_kernel_ops = 2.0 * tile.macs / cyc * device.freq_hz
+    eff = _ARRAY_EFF[(precision, cfg.pattern)]
+    total = cfg.matmul_kernels * per_kernel_ops * eff
+    return total / 1e9 if precision == "fp32" else total / 1e12
+
+
+def design_core_power(cfg: ArrayConfig, precision: str) -> float:
+    p = _CORE_POWER_W[precision]
+    return cfg.matmul_kernels * p["matmul"] + cfg.adder_cores * p["adder"]
+
+
+def evaluate_design(cfg: ArrayConfig, precision: str,
+                    device: AIEDevice = AIE_VC1902) -> DesignPoint:
+    tile = _TILES[precision]
+    tput = design_throughput(cfg, precision, device, tile)
+    core_p = design_core_power(cfg, precision)
+    mem = _REPORTED_MEMORY.get((precision, cfg.x, cfg.y, cfg.z))
+    if mem is not None:
+        banks, dma, mem_p = mem
+        total = core_p + mem_p
+        # energy eff in GFLOPs/W (fp32) or TOPs/W (int8)
+        eff = tput / total
+        return DesignPoint(precision, cfg, tile, tput, core_p, mem_p, total,
+                           eff, banks, dma, cfg.plio_in + cfg.plio_out)
+    return DesignPoint(precision, cfg, tile, tput, core_p, None, None, None,
+                       None, cfg.dma_banks, cfg.plio_in + cfg.plio_out)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8: performance vs. (square) matrix size, with zero-padding
+# ---------------------------------------------------------------------------
+
+
+def padded(v: int, multiple: int) -> int:
+    return multiple * math.ceil(v / multiple)
+
+
+def throughput_vs_size(size: int, cfg: ArrayConfig, precision: str,
+                       device: AIEDevice = AIE_VC1902) -> float:
+    """Effective throughput for a square ``size^3`` MatMul, assuming PL-side
+    tiling with zero padding to the design's native macro-tile (paper
+    §V-B4)."""
+    tile = _TILES[precision]
+    mm = cfg.x * tile.m
+    kk = cfg.y * tile.k
+    nn = cfg.z * tile.n
+    useful = float(size) ** 3
+    padded_work = float(padded(size, mm)) * padded(size, kk) * padded(size, nn)
+    return design_throughput(cfg, precision, device, tile) * useful / padded_work
+
+
+def mlp_inference_gflops(layer_dims: List[int], batch: int,
+                         cfg: ArrayConfig, precision: str = "fp32") -> float:
+    """End-to-end MLP MatMul throughput under the Fig. 8 padding model.
+    Used to reproduce the §V-B4 MLP claim (+29% over CHARM)."""
+    tile = _TILES[precision]
+    mm, kk, nn = cfg.x * tile.m, cfg.y * tile.k, cfg.z * tile.n
+    peak = design_throughput(cfg, precision, AIE_VC1902, tile)
+    useful = 0.0
+    padded_work = 0.0
+    for d_in, d_out in zip(layer_dims[:-1], layer_dims[1:]):
+        useful += float(batch) * d_in * d_out
+        padded_work += float(padded(batch, mm)) * padded(d_in, kk) * padded(d_out, nn)
+    return peak * useful / padded_work

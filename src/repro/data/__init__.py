@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    DataConfig,
+    MemmapTokenSource,
+    SyntheticTokenSource,
+    TokenPipeline,
+)
+
+__all__ = ["DataConfig", "TokenPipeline", "SyntheticTokenSource",
+           "MemmapTokenSource"]

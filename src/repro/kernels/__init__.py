@@ -1,0 +1,20 @@
+# Pallas compute hot-spots the paper optimizes: the MatMul kernel itself
+# (§IV-C1), the adder-tree Add kernel (§IV-B), and the int8 quantizer
+# feeding the paper's int8 pipeline.
+from repro.kernels.ops import (
+    addertree,
+    dequantize_rowwise,
+    kernel_mode,
+    matmul,
+    quantize_rowwise,
+    set_kernel_mode,
+)
+
+__all__ = [
+    "matmul",
+    "addertree",
+    "quantize_rowwise",
+    "dequantize_rowwise",
+    "set_kernel_mode",
+    "kernel_mode",
+]

@@ -1,0 +1,68 @@
+"""Adder-tree Pallas kernel — the paper's Add kernel (§IV-B, Fig. 5).
+
+MaxEVA reduces the Y partial products of each (x, z) group *on the array*,
+running all Y-1 Add kernels sequentially on a single AIE core with
+single-buffered intermediates.  The TPU analogue reduces a stack of
+partial-product tiles inside VMEM with a single accumulator tile, walking
+the Y axis sequentially in the grid — one pass over HBM for Y partials
+instead of Y-1 separate binary-add passes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import accum_dtype
+
+
+def _addertree_kernel(p_ref, o_ref, acc_ref, *, s_steps: int, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += p_ref[...].astype(acc_ref.dtype)
+
+    @pl.when(pl.program_id(2) == s_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "out_dtype", "interpret"))
+def addertree_pallas(
+    partials: jnp.ndarray,
+    *,
+    block: Tuple[int, int] = (256, 256),
+    out_dtype=None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """out[M, N] = sum_s partials[s, M, N], 32-bit accumulation."""
+    assert partials.ndim == 3
+    s, m, n = partials.shape
+    bm, bn = block
+    acc = (accum_dtype(partials.dtype)
+           if partials.dtype in (jnp.dtype("int8"), jnp.dtype("bfloat16"),
+                                 jnp.dtype("float32"))
+           else partials.dtype)
+    out_dtype = out_dtype or partials.dtype
+
+    pm = (-m) % bm
+    pn = (-n) % bn
+    p = jnp.pad(partials, ((0, 0), (0, pm), (0, pn))) if (pm or pn) else partials
+    mp, np_ = p.shape[1], p.shape[2]
+    grid = (mp // bm, np_ // bn, s)
+
+    out = pl.pallas_call(
+        functools.partial(_addertree_kernel, s_steps=s, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((None, bm, bn), lambda i, j, y: (y, i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, y: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc)],
+        interpret=interpret,
+    )(p)
+    return out[:m, :n]

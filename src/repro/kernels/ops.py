@@ -1,0 +1,119 @@
+"""jit'd dispatch wrappers over the Pallas kernels.
+
+On a TPU backend the Pallas path compiles natively; everywhere else (this
+container is CPU-only) callers either get the XLA reference path (identical
+semantics, real HLO for the dry-run/roofline) or may force
+``interpret=True`` to execute the kernel bodies in Python for validation.
+The mode is a process-global policy so that model code never has to thread
+a backend flag through every layer.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import plan_tpu_block
+from repro.kernels import ref
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.addertree import addertree_pallas
+from repro.kernels.quantize import quantize_rowwise_pallas
+
+# 'auto': pallas on TPU, XLA elsewhere.  'pallas': force pallas (native).
+# 'interpret': force pallas interpret mode (CPU validation).  'xla': force
+# the reference path.
+_MODE = os.environ.get("REPRO_KERNEL_MODE", "auto")
+_VALID_MODES = ("auto", "pallas", "interpret", "xla")
+
+
+def set_kernel_mode(mode: str) -> None:
+    global _MODE
+    assert mode in _VALID_MODES, mode
+    _MODE = mode
+
+
+def kernel_mode() -> str:
+    if _MODE == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return _MODE
+
+
+@functools.lru_cache(maxsize=None)
+def default_block(m: int, k: int, n: int, dtype: str) -> Tuple[int, int, int]:
+    b = plan_tpu_block(m, k, n, dtype)
+    return (b.bm, b.bk, b.bn)
+
+
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    out_dtype=None,
+    block: Optional[Tuple[int, int, int]] = None,
+    mode: Optional[str] = None,
+) -> jnp.ndarray:
+    """Planned, blocked matmul (2D x 2D).  Higher-rank callers flatten the
+    leading dims (activation rows are the M axis, as in the paper)."""
+    mode = mode or kernel_mode()
+    if mode == "xla":
+        return ref.matmul_ref(a, b, out_dtype)
+    if block is None:
+        dt = {"bfloat16": "bf16", "float32": "fp32", "int8": "int8"}[
+            str(a.dtype)
+        ]
+        block = default_block(a.shape[0], a.shape[1], b.shape[1], dt)
+        # never exceed the (padded) problem itself
+        block = (
+            min(block[0], _round_pow2_up(a.shape[0])),
+            min(block[1], _round_pow2_up(a.shape[1])),
+            min(block[2], _round_pow2_up(b.shape[1])),
+        )
+    return matmul_pallas(
+        a, b, block=block, out_dtype=out_dtype, interpret=(mode == "interpret")
+    )
+
+
+def addertree(
+    partials: jnp.ndarray,
+    *,
+    out_dtype=None,
+    block: Tuple[int, int] = (256, 256),
+    mode: Optional[str] = None,
+) -> jnp.ndarray:
+    mode = mode or kernel_mode()
+    if mode == "xla":
+        return ref.addertree_ref(partials, out_dtype)
+    block = (
+        min(block[0], _round_pow2_up(partials.shape[1])),
+        min(block[1], _round_pow2_up(partials.shape[2])),
+    )
+    return addertree_pallas(
+        partials, block=block, out_dtype=out_dtype,
+        interpret=(mode == "interpret"),
+    )
+
+
+def quantize_rowwise(
+    x: jnp.ndarray, *, block_rows: int = 256, mode: Optional[str] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mode = mode or kernel_mode()
+    if mode == "xla":
+        return ref.quantize_rowwise_ref(x)
+    return quantize_rowwise_pallas(
+        x, block_rows=min(block_rows, _round_pow2_up(x.shape[0])),
+        interpret=(mode == "interpret"),
+    )
+
+
+def dequantize_rowwise(q, scale, dtype=jnp.float32):
+    return ref.dequantize_rowwise_ref(q, scale, dtype)
+
+
+def _round_pow2_up(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p

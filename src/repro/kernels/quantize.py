@@ -1,0 +1,58 @@
+"""Row-wise symmetric int8 quantization Pallas kernel.
+
+Supports the paper's int8 MatMul pipeline (int8 inputs, int32 accumulation,
+scales re-applied on the way out) and the int8 error-feedback gradient
+compression used by the distributed optimizer (``optim.compression``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def quantize_rowwise_pallas(
+    x: jnp.ndarray,
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(q int8 [M, N], scale f32 [M, 1]) = rowwise-quantize(x [M, N]).
+
+    Rows must be block-complete (the scale is a full-row reduction), so the
+    grid tiles M only and each block spans all of N.
+    """
+    assert x.ndim == 2
+    m, n = x.shape
+    pm = (-m) % block_rows
+    xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
+    mp = xp.shape[0]
+    grid = (mp // block_rows,)
+
+    q, s = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, n), jnp.int8),
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp)
+    return q[:m], s[:m]

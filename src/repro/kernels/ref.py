@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's tests sweep shapes and
+dtypes and ``assert_allclose`` against these functions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+_ACCUM = {
+    jnp.dtype("int8"): jnp.int32,
+    jnp.dtype("bfloat16"): jnp.float32,
+    jnp.dtype("float32"): jnp.float32,
+}
+
+
+def accum_dtype(dtype) -> jnp.dtype:
+    return _ACCUM[jnp.dtype(dtype)]
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+               out_dtype: Optional[jnp.dtype] = None) -> jnp.ndarray:
+    """C = A @ B with 32-bit accumulation (paper §IV-C1: int8 inputs
+    accumulate in int32; floats accumulate in fp32)."""
+    acc = accum_dtype(a.dtype)
+    out_dtype = out_dtype or acc
+    return jnp.dot(a, b, preferred_element_type=acc).astype(out_dtype)
+
+
+def addertree_ref(partials: jnp.ndarray,
+                  out_dtype: Optional[jnp.dtype] = None) -> jnp.ndarray:
+    """Sum of Y stacked (M, N) partial products -- the paper's adder tree
+    (Y-1 sequential Add kernels on one core)."""
+    acc = accum_dtype(partials.dtype) if partials.dtype in _ACCUM else partials.dtype
+    out_dtype = out_dtype or partials.dtype
+    return jnp.sum(partials.astype(acc), axis=0).astype(out_dtype)
+
+
+def quantize_rowwise_ref(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise symmetric int8 quantization: q = round(x / s), s = absmax/127.
+    Returns (q int8 [M, N], scale f32 [M, 1])."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = (jnp.maximum(absmax, 1e-12) / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_rowwise_ref(q: jnp.ndarray, scale: jnp.ndarray,
+                           dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantized_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
+                         out_dtype=jnp.float32) -> jnp.ndarray:
+    """int8 x int8 -> int32 matmul with row/col scales applied afterwards:
+    the fully-quantized MatMul path (paper's int8 pipeline)."""
+    qa, sa = quantize_rowwise_ref(a)
+    qb, sb = quantize_rowwise_ref(b.T)  # column-wise scales for B
+    acc = jnp.dot(qa, qb.T, preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * sa * sb.T).astype(out_dtype)

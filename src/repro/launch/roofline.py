@@ -1,0 +1,179 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis()`` provides HLO FLOPs and bytes accessed for the
+per-device SPMD program.  Collective wire bytes are NOT in cost_analysis:
+we parse the HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, applying
+ring-algorithm wire factors using the parsed replica-group size.
+
+Hardware constants (assignment-fixed, see core.device_model.TPU_V5E):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional
+
+from repro.core.device_model import TPU_V5E, TPUDevice
+
+# element bytes by HLO dtype prefix
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s8": 1, "u8": 1, "pred": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+# `  %name = shape op-name(` or `  name = (shape, shape) op-name(`
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute"
+    r"|ragged-all-to-all)"
+    r"(-start)?\(([^)]*)\)(.*)$"
+)
+
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}")
+
+
+def _shape_bytes(s: str) -> float:
+    """Sum of element bytes over every `dtype[d0,d1,...]` in the string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: float
+    operand_bytes: float
+    group_size: int
+    wire_bytes: float
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # replica_groups=[G,S]<=[N]: G groups of S members.
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        items = [t for t in m.group(1).split(",") if t.strip() != ""]
+        return max(1, len(items))
+    return default
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        if "-done" in line or "-update(" in line:
+            continue
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        result_s, kind, _start, operands, rest = m.groups()
+        # Operands are printed without type annotations in current XLA HLO
+        # dumps, so all sizing derives from the (per-device) result shape.
+        res_b = _shape_bytes(result_s)
+        g = _group_size(line)
+        if kind == "all-reduce":
+            wire = 2.0 * (g - 1) / max(g, 1) * res_b
+        elif kind == "all-gather":
+            # result is the gathered (full) buffer
+            wire = (g - 1) / max(g, 1) * res_b
+        elif kind == "reduce-scatter":
+            # result is the scattered shard; the reduced buffer is g x that
+            wire = float(g - 1) * res_b
+        elif kind in ("all-to-all", "ragged-all-to-all"):
+            wire = (g - 1) / max(g, 1) * res_b
+        else:  # collective-permute: one send of the (result-sized) buffer
+            wire = res_b
+        ops.append(CollectiveOp(kind, res_b, res_b, g, wire))
+    return ops
+
+
+def collective_wire_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire-byte totals by collective kind + grand total."""
+    ops = parse_collectives(hlo_text)
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    for op in ops:
+        out[op.kind] += op.wire_bytes
+    out["total_wire_bytes"] = sum(out[k] for k in _COLLECTIVES)
+    out["n_collectives"] = float(len(ops))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_flops_ratio: Optional[float] = None
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        return d
+
+
+def roofline_terms(
+    cost: Dict[str, float],
+    wire: Dict[str, float],
+    device: TPUDevice = TPU_V5E,
+    dtype: str = "bf16",
+    model_flops_per_device: Optional[float] = None,
+) -> RooflineTerms:
+    """Terms from a compiled per-device SPMD program.
+
+    compute  = HLO_FLOPs / peak_FLOP/s        (per chip)
+    memory   = HLO_bytes / HBM_bw             (per chip)
+    collective = wire_bytes / ICI link bw     (per chip; ring factors are
+                 already folded into wire_bytes by the parser)
+    """
+    flops = float(cost.get("flops", 0.0) or 0.0)
+    hbm = float(cost.get("bytes accessed", 0.0) or 0.0)
+    wb = float(wire.get("total_wire_bytes", 0.0))
+    compute_s = flops / device.peak_flops[dtype]
+    memory_s = hbm / device.hbm_bw
+    collective_s = wb / device.ici_bw_per_link
+    dom = max(
+        [("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)],
+        key=lambda kv: kv[1],
+    )[0]
+    ratio = None
+    if model_flops_per_device:
+        ratio = model_flops_per_device / flops if flops else None
+    return RooflineTerms(flops, hbm, wb, compute_s, memory_s, collective_s,
+                         dom, model_flops_per_device, ratio)

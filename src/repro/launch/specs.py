@@ -1,0 +1,55 @@
+"""ShapeDtypeStruct stand-ins for every model input, per (arch x shape).
+
+No device allocation: the dry-run lowers/compiles against these.  Modality
+frontends are stubs per the assignment — whisper gets precomputed frame
+embeddings, paligemma precomputed patch embeddings."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell
+
+
+def train_batch_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b = cell.global_batch
+    s_text = cell.seq_len - (cfg.prefix_tokens or 0)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, s_text), jnp.int32),
+    }
+    if cfg.prefix_tokens:
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (b, cfg.prefix_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.encdec:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def prefill_batch_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    specs = train_batch_specs(cfg, cell)
+    del specs["targets"]
+    return specs
+
+
+def decode_inputs(cfg: ArchConfig, cell: ShapeCell, model) -> Tuple:
+    """(cache, token, pos) abstract inputs for one decode step at a KV
+    length of ``cell.seq_len``."""
+    b = cell.global_batch
+    cache = model.abstract_cache(b, cell.seq_len)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, token, pos
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, model=None):
+    cell = SHAPES[shape_name]
+    if cell.kind == "train":
+        return train_batch_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_batch_specs(cfg, cell)
+    assert model is not None, "decode specs need the model (cache schema)"
+    return decode_inputs(cfg, cell, model)

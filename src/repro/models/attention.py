@@ -1,0 +1,406 @@
+"""Attention: chunked-flash training/prefill path, cached decode path.
+
+Variants required by the assigned archs:
+  * global causal (all), GQA grouping (q heads grouped over kv heads)
+  * sliding-window 'local' (gemma2/3, recurrentgemma)
+  * 'chunked' iRoPE-style block-local (llama4)
+  * prefix-LM bidirectional prefix (paligemma)
+  * bidirectional 'full' + cross-attention (whisper)
+  * attention-logit softcap (gemma2)
+
+The flash path is a jnp scan over (q-chunk x kv-chunk) blocks with running
+(max, denom, acc) — the working set stays O(chunk^2), which is what makes
+the 32k prefill cells compilable.  Local/chunked kinds slice a static-size
+kv window per q chunk instead of scanning all kv (O(S * W) not O(S^2)).
+
+Sharding: projections are GSPMD-sharded einsums (weights column/row
+sharded over the model axis — the X*Z / Y*Z mapping, compiler-scheduled);
+the attention core constrains the kv-head dim over 'model' when divisible,
+else the head_dim (always divisible: 16 | hd for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.sharding import constrain
+from repro.models.layers import TPCtx, rope
+from repro.models.param import ParamDef
+
+_NEG = -1e30
+
+
+def use_xyz_attn_out(cfg: ArchConfig, model: int) -> bool:
+    """o-proj through the MaxEVA xyz row-parallel path (adder tree +
+    sequence scatter) — needs whole heads per model shard."""
+    return (model > 1 and cfg.n_heads % model == 0
+            and cfg.q_dim % model == 0)
+
+
+def attn_defs(cfg: ArchConfig, model: int, dtype: str,
+              fsdp: bool) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    col = P("data", "model") if fsdp else P(None, "model")
+    row = P("model", "data") if fsdp else P("model", None)
+    defs = {
+        "wq": ParamDef((d, cfg.q_dim), col, dtype=dtype),
+        "wk": ParamDef((d, cfg.kv_dim), col, dtype=dtype),
+        "wv": ParamDef((d, cfg.kv_dim), col, dtype=dtype),
+    }
+    if use_xyz_attn_out(cfg, model):
+        from repro.core.maxeva_matmul import xyz_weight_shape
+        defs["wo"] = ParamDef(
+            xyz_weight_shape(cfg.q_dim, d, model, model),
+            P("model", "data", None) if fsdp else P("model", None, None),
+            dtype=dtype)
+    else:
+        defs["wo"] = ParamDef((cfg.q_dim, d), row, dtype=dtype)
+    return defs
+
+
+def _head_spec(n_heads: int, ctx: TPCtx) -> P:
+    """[B, S, H, hd]: shard heads over model.  GSPMD pads uneven head
+    counts (whisper 12, llama4 40); past 2x padding fall back to
+    replicated heads (none of the assigned archs hit that)."""
+    if ctx.model == 1:
+        return P()
+    if n_heads * 2 >= ctx.model:
+        return P(ctx.dp, None, "model", None)
+    return P(ctx.dp, None, None, None)
+
+
+def _constrain_qkv(q, k, v, cfg: ArchConfig, ctx: TPCtx):
+    """All three in head-expanded layout [B, S, H, hd]; heads are the
+    paper's Z axis — fully parallel, zero collectives inside the flash
+    loops."""
+    if ctx.model == 1:
+        return q, k, v
+    spec = _head_spec(cfg.n_heads, ctx)
+    return (constrain(q, ctx.mesh, spec), constrain(k, ctx.mesh, spec),
+            constrain(v, ctx.mesh, spec))
+
+
+def fused_qkv_sp(params, x_sharded, cfg: ArchConfig, ctx: TPCtx):
+    """QKV projections in ONE shard_map over seq-sharded input: the
+    sequence all-gather (broadcast) happens inside, so its backward is the
+    AG transpose (reduce-scatter) instead of one all-reduce of [B,S,D] per
+    projection (§Perf iteration 3).  q comes out head-sharded; k/v are
+    re-gathered to full (they are g-times smaller)."""
+    from repro.core.maxeva_matmul import _shard_map
+    from repro.models.layers import _row_spec
+    mesh = ctx.mesh
+    rs = _row_spec(x_sharded, ctx)
+    cd = ctx.compute_dtype
+
+    def body(xl, wq, wk, wv):
+        x2 = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+        b, s, _ = x2.shape
+        xf = x2.reshape(b * s, -1).astype(cd)
+        q = (xf @ wq.astype(cd)).reshape(b, s, -1)
+        k = (xf @ wk.astype(cd)).reshape(b, s, -1)
+        v = (xf @ wv.astype(cd)).reshape(b, s, -1)
+        k = jax.lax.all_gather(k, "model", axis=2, tiled=True)
+        v = jax.lax.all_gather(v, "model", axis=2, tiled=True)
+        return q, k, v
+
+    q, k, v = _shard_map(
+        body, mesh,
+        (P(rs, "model", None), P(None, "model"), P(None, "model"),
+         P(None, "model")),
+        (P(rs, None, "model"), P(rs, None, None), P(rs, None, None)),
+    )(x_sharded, params["wq"], params["wk"], params["wv"])
+    b, s = q.shape[0], q.shape[1]
+    return (q.reshape(b, s, cfg.n_heads, cfg.hd),
+            k.reshape(b, s, cfg.n_kv_heads, cfg.hd),
+            v.reshape(b, s, cfg.n_kv_heads, cfg.hd))
+
+
+# ---------------------------------------------------------------------------
+# flash attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_attend(qc, kc, vc, qpos, kpos, *, kind, window, prefix_len,
+                  softcap, carry=None):
+    """One (q-chunk, kv-chunk) block with running-softmax carry.
+
+    Head-expanded layout: qc [B, Cq, H, hd]; kc/vc [B, Ck, H, hd] (GQA kv
+    heads repeated to H before sharding — heads are the fully-parallel Z
+    axis).  Positions are global.
+    carry = (m [B,H,Cq], l [B,H,Cq], acc [B,H,Cq,hd]).
+    """
+    s = jnp.einsum("bqhd,bKhd->bhqK", qc.astype(jnp.float32),
+                   kc.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if kind in ("global", "local", "chunked", "prefix"):
+        mask &= qpos[:, None] >= kpos[None, :]
+    if kind == "local":
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    if kind == "chunked":
+        mask &= (qpos[:, None] // window) == (kpos[None, :] // window)
+    if kind == "prefix":
+        mask |= kpos[None, :] < prefix_len
+        mask &= kpos[None, :] >= 0
+    mask &= kpos[None, :] >= 0  # left/right padding of kv slices
+    s = jnp.where(mask[None, None], s, _NEG)
+
+    if carry is None:
+        b, ck, h, hd = kc.shape
+        cq = qc.shape[1]
+        m = jnp.full((b, h, cq), _NEG, jnp.float32)
+        l = jnp.zeros((b, h, cq), jnp.float32)
+        acc = jnp.zeros((b, h, cq, hd), jnp.float32)
+    else:
+        m, l, acc = carry
+
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    # guard fully-masked rows: exp(_NEG - _NEG) would be 1
+    alpha = jnp.exp(jnp.minimum(m - m_new, 0.0))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(mask[None, None], p, 0.0)
+    l = l * alpha + jnp.sum(p, axis=-1)
+    acc = acc * alpha[..., None] + jnp.einsum("bhqK,bKhd->bhqd", p,
+                                              vc.astype(jnp.float32))
+    return m_new, l, acc
+
+
+def flash_attention(q, k, v, *, kind="global", window=0, prefix_len=0,
+                    softcap=None, q_chunk=512, kv_chunk=512,
+                    q_offset=0) -> jnp.ndarray:
+    """Head-expanded: q/k/v [B, S, H, hd] -> [B, Sq, H, hd].
+
+    ``q_offset``: global position of q[0] (prefill continuation).
+    """
+    b, sq, n_h, hd = q.shape
+    skv = k.shape[1]
+    q = q * (hd ** -0.5)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    sq_orig = sq
+    if sq % q_chunk != 0:  # e.g. whisper's 1500 encoder frames
+        q = jnp.pad(q, ((0, 0), (0, q_chunk - sq % q_chunk), (0, 0),
+                        (0, 0)))
+        sq = q.shape[1]
+    nq = sq // q_chunk
+
+    windowed = kind in ("local", "chunked") and window > 0 and skv > window
+
+    if windowed:
+        assert q_offset == 0, "windowed flash supports q_offset=0 only"
+        # pad kv on the left so every q chunk slices a static-size window:
+        # q chunk qi needs global kpos in [qi*Cq - W, qi*Cq + Cq) for both
+        # 'local' (sliding) and 'chunked' (block-aligned; mask trims).
+        pad = window
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+        def per_q(qi):
+            qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            # padded index of global position p is p + W
+            kc = jax.lax.dynamic_slice_in_dim(kp, qi * q_chunk,
+                                              window + q_chunk, 1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, qi * q_chunk,
+                                              window + q_chunk, 1)
+            kpos = qi * q_chunk - window + jnp.arange(window + q_chunk)
+            m, l, acc = _block_attend(qc, kc, vc, qpos, kpos, kind=kind,
+                                      window=window, prefix_len=prefix_len,
+                                      softcap=softcap)
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return jnp.einsum("bhqd->bqhd", out)
+
+        outs = jax.lax.map(per_q, jnp.arange(nq))
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, n_h, hd)
+        return out[:, :sq_orig].astype(q.dtype)
+
+    # global / full / prefix: scan kv chunks with running softmax
+    kv_len = skv
+    if skv % kv_chunk != 0:  # e.g. whisper's 1500 encoder frames
+        pad = kv_chunk - skv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        skv = k.shape[1]
+    nk = skv // kv_chunk
+    kr = jnp.moveaxis(k.reshape(b, nk, kv_chunk, n_h, hd), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kv_chunk, n_h, hd), 1, 0)
+
+    def per_q(qi):
+        qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, inp):
+            kj, kc, vc = inp
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            kpos = jnp.where(kpos < kv_len, kpos, -1)  # right-pad mask
+            carry = _block_attend(qc, kc, vc, qpos, kpos, kind=kind,
+                                  window=window, prefix_len=prefix_len,
+                                  softcap=softcap, carry=carry)
+            return carry, None
+
+        m0 = jnp.full((b, n_h, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, n_h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, n_h, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kr, vr))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.einsum("bhqd->bqhd", out)
+
+    outs = jax.lax.map(per_q, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, n_h, hd)
+    return out[:, :sq_orig].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, pos, *, kind="global", window=0,
+                     softcap=None) -> jnp.ndarray:
+    """q [B, 1, kv, g, hd]; caches [B, S, kv, hd] (global) or ring buffers
+    [B, W, kv, hd] (local/chunked).  ``pos`` is the current position."""
+    hd = q.shape[-1]
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.einsum("bqkgd,bKkd->bkgqK", qf, k_cache.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    slots = jnp.arange(k_cache.shape[1])
+    if kind == "full":          # cross-attention: every slot is valid
+        valid = slots >= 0
+    elif kind == "global":
+        valid = slots <= pos
+    else:
+        w = k_cache.shape[1]
+        # ring buffer: slot j holds global position pos - ((pos - j) mod W)
+        kpos = pos - jnp.mod(pos - slots, w)
+        valid = (kpos >= 0) & (kpos <= pos)
+        if kind == "local":
+            valid &= (pos - kpos) < window
+        else:  # chunked
+            valid &= (kpos // window) == (pos // window)
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[None, None, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgqK,bKkd->bkgqd", p, v_cache.astype(jnp.float32))
+    out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
+    return jnp.einsum("bkgqd->bqkgd", out).astype(q.dtype)
+
+
+def update_cache(k_cache, v_cache, k_new, v_new, pos, *, ring: bool):
+    """Insert [B, 1, kv, hd] at ``pos`` (mod W for ring buffers)."""
+    slot = jnp.mod(pos, k_cache.shape[1]) if ring else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), slot, axis=1)
+    return k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# the full attention sub-block (projections + core + output)
+# ---------------------------------------------------------------------------
+
+def attention_apply(
+    params: Dict[str, jnp.ndarray],
+    x: jnp.ndarray,                  # [B, S, D] replicated-over-model
+    cfg: ArchConfig,
+    ctx: TPCtx,
+    *,
+    kind: str,
+    theta: float,
+    positions: jnp.ndarray,          # [S] global positions
+    prefix_len: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    pos: Optional[jnp.ndarray] = None,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    use_rope: bool = True,
+    x_seq_sharded: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]], bool]:
+    """Returns (attn_out, new_cache, out_is_seq_sharded).
+
+    Modes: cache None -> train/prefill over the full sequence;
+    cache present -> single-token decode (S == 1) at position ``pos``.
+    ``kv_override`` supplies external K/V activations (cross-attention).
+    ``x_seq_sharded``: x is the SP-sharded residual; the QKV fused path
+    performs the gather internally.
+    """
+    b, s, _ = x.shape
+    n_kv, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
+    cd = ctx.compute_dtype
+
+    if x_seq_sharded and kv_override is None:
+        q, k, v = fused_qkv_sp(params, x, cfg, ctx)
+        if use_rope:
+            q = rope(q, positions, theta)
+            k = rope(k, positions, theta)
+    else:
+        q = jnp.einsum("bsd,dn->bsn", x, params["wq"].astype(cd))
+        q = q.reshape(b, s, cfg.n_heads, hd)
+        if kv_override is None:
+            kx = jnp.einsum("bsd,dn->bsn", x, params["wk"].astype(cd))
+            vx = jnp.einsum("bsd,dn->bsn", x, params["wv"].astype(cd))
+            k = kx.reshape(b, s, n_kv, hd)
+            v = vx.reshape(b, s, n_kv, hd)
+            if use_rope:
+                q = rope(q, positions, theta)
+                k = rope(k, positions, theta)
+        else:
+            k, v = kv_override
+            if use_rope:
+                q = rope(q, positions, theta)
+
+    new_cache = None
+    if cache is None:
+        # head-expand GQA K/V once, OUTSIDE the flash loops, so the blocks
+        # are fully head-parallel (paper Z-sharding, zero inner collectives)
+        ke = jnp.repeat(k, g, axis=2) if g > 1 else k
+        ve = jnp.repeat(v, g, axis=2) if g > 1 else v
+        q, ke, ve = _constrain_qkv(q, ke, ve, cfg, ctx)
+        out = flash_attention(q, ke, ve, kind=kind, window=cfg.window,
+                              prefix_len=prefix_len,
+                              softcap=cfg.attn_softcap,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+    else:
+        qg = q.reshape(b, s, n_kv, g, hd)
+        if kv_override is None:
+            ring = kind in ("local", "chunked")
+            kc, vc = update_cache(cache["k"], cache["v"], k, v, pos,
+                                  ring=ring)
+            new_cache = dict(cache, k=kc, v=vc)
+            out = decode_attention(qg, kc, vc, pos, kind=kind,
+                                   window=cfg.window,
+                                   softcap=cfg.attn_softcap)
+        else:  # cross-attention: static external KV
+            new_cache = cache
+            out = decode_attention(qg, k, v, jnp.asarray(k.shape[1] - 1),
+                                   kind="full", softcap=cfg.attn_softcap)
+
+    out = out.reshape(b, s, cfg.q_dim).astype(cd)
+    if use_xyz_attn_out(cfg, ctx.model):
+        from repro.core.maxeva_matmul import XYZConfig, \
+            xyz_matmul_replicated_out
+        from repro.models.layers import _sp_active, xyz_matmul_seq_scatter
+        if cache is None and _sp_active(out, ctx):
+            # adder tree + sequence scatter fused (RS instead of AR); the
+            # attention core's head sharding IS the natural ksharded layout
+            o = xyz_matmul_seq_scatter(out, params["wo"], ctx=ctx,
+                                       x_layout="ksharded")
+            return o, new_cache, True  # seq-sharded output
+        o = xyz_matmul_replicated_out(
+            out, params["wo"], mesh=ctx.mesh,
+            cfg=XYZConfig(y=ctx.model, x_layout="replicated" if cache
+                          is not None else "ksharded",
+                          out_dtype=cd))
+        return o, new_cache, False
+    o = jnp.einsum("bsn,nd->bsd", out, params["wo"].astype(cd))
+    return o, new_cache, False

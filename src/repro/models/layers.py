@@ -1,0 +1,306 @@
+"""Shared layers: norms, RoPE, vocab-parallel embedding, MaxEVA-planned MLP.
+
+All heavy GEMMs route through the MaxEVA XYZ matmul (core.maxeva_matmul):
+column-parallel up/gate projections (Z = model, the input broadcast),
+row-parallel down projections (Y = model, the adder-tree reduction), with
+the reduction schedule chosen per the placement-pattern economics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.maxeva_matmul import (
+    XYZConfig,
+    _shard_map,
+    xyz_matmul,
+    xyz_matmul_replicated_out,
+    xyz_weight_shape,
+)
+from repro.core.sharding import dp_axes, model_size
+from repro.models.param import ParamDef
+
+
+@dataclasses.dataclass(frozen=True)
+class TPCtx:
+    """Tensor/sequence-parallel context threaded through every layer."""
+
+    mesh: Mesh
+    sp: bool                       # residual stream seq-sharded over model
+    compute_dtype: Any = jnp.bfloat16
+    down_schedule: str = "reduce_scatter"   # P2 analogue by default
+    up_y: int = 1                  # Y for up/gate projections (Z = model/Y)
+    down_y: Optional[int] = None   # Y for down projections (default: model)
+
+    @property
+    def model(self) -> int:
+        return model_size(self.mesh)
+
+    @property
+    def dp(self):
+        return dp_axes(self.mesh)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x [..., S, n, hd] (n = heads or groups), positions [S] or [B, S]."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # [..., S, half]
+    # broadcast over the head dim: [..., S, 1, half]
+    ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sequence-parallel gather / scatter (Megatron-SP; the broadcast + adder
+# tree applied to the residual stream)
+# ---------------------------------------------------------------------------
+
+def _row_spec(x: jnp.ndarray, ctx: TPCtx):
+    from repro.core.sharding import row_axes
+    return row_axes(ctx.mesh, x.shape[0])
+
+
+def _sp_active(x: jnp.ndarray, ctx: TPCtx) -> bool:
+    """SP applies only when the (global) sequence dim is shardable: decode
+    steps (S=1) and whisper's 1500-frame encoder fall through to no-ops."""
+    return (ctx.sp and ctx.model > 1 and x.shape[1] % ctx.model == 0
+            and x.shape[1] >= ctx.model)
+
+
+def gather_seq(x: jnp.ndarray, ctx: TPCtx) -> jnp.ndarray:
+    """[B, S, D] seq-sharded over model -> replicated (all-gather)."""
+    if not _sp_active(x, ctx):
+        return x
+
+    rs = _row_spec(x, ctx)
+
+    def body(xl):
+        return jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+
+    return _shard_map(body, ctx.mesh, (P(rs, "model", None),),
+                      P(rs, None, None))(x)
+
+
+def scatter_seq(x: jnp.ndarray, ctx: TPCtx) -> jnp.ndarray:
+    """[B, S, D] (replicated over model) -> seq-sharded (keep own shard)."""
+    if not _sp_active(x, ctx):
+        return x
+
+    rs = _row_spec(x, ctx)
+
+    def body(xl):
+        md = jax.lax.axis_index("model")
+        shard = xl.shape[1] // ctx.model
+        return jax.lax.dynamic_slice_in_dim(xl, md * shard, shard, axis=1)
+
+    return _shard_map(body, ctx.mesh, (P(rs, None, None),),
+                      P(rs, "model", None))(x)
+
+
+def xyz_matmul_seq_scatter(x: jnp.ndarray, w_xyz: jnp.ndarray, *,
+                           ctx: TPCtx, x_layout: str = "ksharded") -> jnp.ndarray:
+    """Row-parallel (Y = model) GEMM whose reduction scatters over the
+    SEQUENCE dim: out [B, S, N] -> [B, S/model, N].  The Megatron-SP
+    down-projection; adder tree + scatter in one collective."""
+    mesh, model = ctx.mesh, ctx.model
+    if model == 1:
+        return xyz_matmul(x, w_xyz, mesh=mesh, cfg=XYZConfig(y=1))
+    rs = _row_spec(x, ctx)
+    x_spec = P(rs, None, "model" if x_layout == "ksharded" else None)
+
+    def body(xl, wl):
+        wl = wl[0]
+        md = jax.lax.axis_index("model")
+        b, s, _ = xl.shape
+        x2 = xl.reshape(b * s, -1)
+        if x_layout == "replicated":
+            from repro.core.maxeva_matmul import _slice_k_block
+            x2 = _slice_k_block(x2, md, model, model)
+        from repro.kernels import ops as kops
+        partial = kops.matmul(x2, wl, out_dtype=jnp.float32) \
+            .astype(ctx.compute_dtype)  # 16-bit wire + AD buffers
+        partial = partial.reshape(b, s, -1)
+        return jax.lax.psum_scatter(partial, "model", scatter_dimension=1,
+                                    tiled=True)
+
+    return _shard_map(body, mesh, (x_spec, P("model", None, None)),
+                      P(rs, "model", None))(x, w_xyz)
+
+
+def mlp_apply_fused_sp(params: Dict[str, jnp.ndarray], h_sharded: jnp.ndarray,
+                       ctx: TPCtx, gated: bool) -> jnp.ndarray:
+    """Whole Megatron-SP MLP in ONE shard_map: AG(x) -> up/gate (broadcast
+    consumers) -> down partial -> psum_scatter over seq.
+
+    Collective economics vs the unfused path: the x broadcast's backward is
+    the AG's transpose (a reduce-scatter) instead of one all-reduce per
+    consumer — measured -25% wire on gemma3 train (EXPERIMENTS §Perf).
+    Requires up_y == 1 and down_y == model (the planner's choice for every
+    assigned arch's MLP)."""
+    mesh, model = ctx.mesh, ctx.model
+    rs = _row_spec(h_sharded, ctx)
+    cd = ctx.compute_dtype
+
+    def body(xl, wu, wg, wd):
+        x2 = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+        b, s, _ = x2.shape
+        xf = x2.reshape(b * s, -1)
+        from repro.kernels import ops as kops
+        hcol = kops.matmul(xf, wu[0], out_dtype=jnp.float32).astype(cd)
+        if wg is not None:
+            g = kops.matmul(xf, wg[0], out_dtype=jnp.float32)
+            hcol = jax.nn.silu(g).astype(cd) * hcol
+        else:
+            hcol = jax.nn.gelu(hcol.astype(jnp.float32)).astype(cd)
+        part = kops.matmul(hcol, wd[0], out_dtype=jnp.float32).astype(cd)
+        part = part.reshape(b, s, -1)
+        return jax.lax.psum_scatter(part, "model", scatter_dimension=1,
+                                    tiled=True)
+
+    wspec = P("model", None, None)
+    if gated:
+        return _shard_map(
+            body, mesh, (P(rs, "model", None), wspec, wspec, wspec),
+            P(rs, "model", None),
+        )(h_sharded, params["up"], params["gate"], params["down"])
+    return _shard_map(
+        lambda xl, wu, wd: body(xl, wu, None, wd), mesh,
+        (P(rs, "model", None), wspec, wspec),
+        P(rs, "model", None),
+    )(h_sharded, params["up"], params["down"])
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel embedding
+# ---------------------------------------------------------------------------
+
+def embed_def(vocab_padded: int, d_model: int, dtype: str,
+              fsdp: bool = False) -> ParamDef:
+    # std 1/sqrt(d): with the sqrt(d) embedding multiplier the stream enters
+    # at unit scale, and the tied head produces ~unit-scale logits.
+    spec = P("model", "data") if fsdp else P("model", None)
+    return ParamDef((vocab_padded, d_model), spec, "normal",
+                    scale=1.0 / math.sqrt(d_model), dtype=dtype)
+
+
+def vocab_parallel_embed(table: jnp.ndarray, ids: jnp.ndarray,
+                         ctx: TPCtx) -> jnp.ndarray:
+    """ids [B, S] -> [B, S, D].  Table is row(vocab)-sharded over model;
+    each shard gathers its range and the psum (adder tree) combines."""
+    mesh, model = ctx.mesh, ctx.model
+    if model == 1:
+        return table[ids].astype(ctx.compute_dtype)
+
+    def body(tbl, ids_l):
+        md = jax.lax.axis_index("model")
+        vloc = tbl.shape[0]
+        loc = ids_l - md * vloc
+        ok = (loc >= 0) & (loc < vloc)
+        loc = jnp.clip(loc, 0, vloc - 1)
+        out = tbl[loc] * ok[..., None].astype(tbl.dtype)
+        return jax.lax.psum(out.astype(ctx.compute_dtype), "model")
+
+    rs = _row_spec(ids, ctx)
+    return _shard_map(body, mesh, (P("model", None), P(rs, None)),
+                      P(rs, None, None))(table, ids)
+
+
+# ---------------------------------------------------------------------------
+# MaxEVA-planned MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int, model: int, gated: bool, dtype: str,
+             fsdp: bool, up_y: int = 1,
+             down_y: Optional[int] = None) -> Dict[str, ParamDef]:
+    down_y = down_y or model
+    up_shape = xyz_weight_shape(d_model, d_ff, model, up_y)
+    down_shape = xyz_weight_shape(d_ff, d_model, model, down_y)
+    spec = P("model", "data", None) if fsdp else P("model", None, None)
+    defs = {
+        "up": ParamDef(up_shape, spec, dtype=dtype),
+        "down": ParamDef(down_shape, spec, dtype=dtype),
+    }
+    if gated:
+        defs["gate"] = ParamDef(up_shape, spec, dtype=dtype)
+    return defs
+
+
+def mlp_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+              ctx: TPCtx, gated: bool) -> jnp.ndarray:
+    """x: replicated-over-model activations [B, S, D] (already gathered if
+    SP).  Returns activations matching the residual-stream sharding:
+    seq-sharded under active SP, replicated otherwise."""
+    model = ctx.model
+    up_cfg = XYZConfig(y=ctx.up_y, schedule=ctx.down_schedule,
+                       out_dtype=ctx.compute_dtype)
+    h = xyz_matmul(x, params["up"], mesh=ctx.mesh, cfg=up_cfg)
+    if gated:
+        g = xyz_matmul(x, params["gate"], mesh=ctx.mesh, cfg=up_cfg)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+
+    down_y = ctx.down_y or model
+    if _sp_active(x, ctx) and down_y == model:
+        # adder tree + sequence scatter fused in one psum_scatter
+        return xyz_matmul_seq_scatter(h, params["down"], ctx=ctx,
+                                      x_layout="ksharded")
+    cfg = XYZConfig(y=down_y, schedule=ctx.down_schedule,
+                    x_layout="ksharded", out_dtype=ctx.compute_dtype)
+    if down_y == model:
+        out = xyz_matmul_replicated_out(h, params["down"], mesh=ctx.mesh,
+                                        cfg=cfg)
+    else:
+        # general Y < model: output lands N-sharded; gather to replicated
+        out = xyz_matmul(h, params["down"], mesh=ctx.mesh, cfg=cfg)
+        out = gather_last_dim(out, ctx)
+    return scatter_seq(out, ctx)
+
+
+def gather_last_dim(x: jnp.ndarray, ctx: TPCtx) -> jnp.ndarray:
+    """[.., N/model sharded] -> replicated [.., N]."""
+    if ctx.model == 1:
+        return x
+    mid = [None] * (x.ndim - 2)
+    rs = _row_spec(x, ctx)
+
+    def body(xl):
+        return jax.lax.all_gather(xl, "model", axis=xl.ndim - 1, tiled=True)
+
+    return _shard_map(body, ctx.mesh, (P(rs, *mid, "model"),),
+                      P(rs, *mid, None))(x)

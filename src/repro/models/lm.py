@@ -1,0 +1,517 @@
+"""LM assembly: params schema, forward (train / prefill / decode), caches.
+
+One generic decoder frame covers all ten assigned archs:
+  * layers follow ``cfg.block_pattern`` cycled; the repeating group is
+    scanned (params stacked on a leading group axis) so compile time is
+    per-group, not per-layer; pattern remainders (recurrentgemma's 38 = 3k+2)
+    run unrolled as a tail.
+  * block = mixer (attention kind / rglru / mlstm / slstm) + FFN
+    (dense MaxEVA-planned MLP or routed MoE); xLSTM blocks carry their own
+    projections (d_ff = 0 -> no FFN sub-block).
+  * whisper adds an encoder stack + per-layer cross-attention;
+    paligemma prepends (stubbed) patch embeddings with a prefix-LM mask.
+
+Residual stream is sequence-sharded over the model axis (Megatron-SP) when
+``cfg.seq_shard_activations``; every block gathers (broadcast) on entry and
+scatters (adder-tree reduction) on exit, exactly the paper's I/O economics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core.sharding import dp_axes, dp_size, model_size
+from repro.models import param as pm
+from repro.models.attention import attn_defs, attention_apply, update_cache
+from repro.models.layers import (
+    TPCtx,
+    _sp_active,
+    embed_def,
+    gather_seq,
+    mlp_apply,
+    mlp_defs,
+    rmsnorm,
+    scatter_seq,
+    vocab_parallel_embed,
+)
+from repro.models.loss import vocab_parallel_logits, vocab_parallel_xent
+from repro.models.moe import moe_apply, moe_defs
+from repro.models.param import ParamDef
+from repro.models.rglru import rglru_apply, rglru_cache_defs, rglru_defs
+from repro.models.xlstm import (
+    mlstm_apply,
+    mlstm_cache_defs,
+    mlstm_defs,
+    slstm_apply,
+    slstm_cache_defs,
+    slstm_defs,
+)
+
+_ATTN_KINDS = ("global", "local", "chunked")
+
+
+def _stack_defs(defs: Any, n: int) -> Any:
+    """Prepend a group axis to every ParamDef in a tree."""
+    def add(d: ParamDef, _path: str):
+        spec = P(*([None] + list(d.spec)))
+        return ParamDef((n, *d.shape), spec, d.init, d.scale, d.dtype,
+                        d.custom)
+    return pm._walk(defs, add)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    mesh: Mesh
+
+    def __post_init__(self):
+        cfg = self.cfg
+        self.ctx = TPCtx(
+            mesh=self.mesh,
+            sp=cfg.seq_shard_activations and model_size(self.mesh) > 1,
+            compute_dtype=jnp.dtype(cfg.compute_dtype),
+        )
+
+    # -- parameter schema ----------------------------------------------------
+
+    def _block_defs(self, btype: str) -> Dict[str, Any]:
+        cfg, model = self.cfg, model_size(self.mesh)
+        dt, fsdp = cfg.param_dtype, cfg.fsdp_params
+        d = {"ln1": ParamDef((cfg.d_model,), P(), init="zeros",
+                             dtype="float32")}
+        if btype in _ATTN_KINDS:
+            d["attn"] = attn_defs(cfg, model, dt, fsdp)
+        elif btype == "rglru":
+            d["mix"] = rglru_defs(cfg, model, dt, fsdp)
+        elif btype == "mlstm":
+            d["mix"] = mlstm_defs(cfg, model, dt, fsdp)
+        elif btype == "slstm":
+            d["mix"] = slstm_defs(cfg, model, dt, fsdp)
+        else:
+            raise ValueError(btype)
+        if self.cfg.encdec:
+            d["lnx"] = ParamDef((cfg.d_model,), P(), init="zeros",
+                                dtype="float32")
+            d["xattn"] = attn_defs(cfg, model, dt, fsdp)
+        if cfg.d_ff > 0:
+            d["ln2"] = ParamDef((cfg.d_model,), P(), init="zeros",
+                                dtype="float32")
+            if cfg.moe:
+                d["ffn"] = moe_defs(cfg, model, dt, fsdp)
+            else:
+                d["ffn"] = mlp_defs(cfg.d_model, cfg.d_ff, model,
+                                    cfg.gated_mlp, dt, fsdp,
+                                    up_y=self.ctx.up_y,
+                                    down_y=self.ctx.down_y)
+        return d
+
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        vp = cfg.padded_vocab()
+        defs: Dict[str, Any] = {
+            "embed": embed_def(vp, cfg.d_model, cfg.param_dtype,
+                               cfg.fsdp_params),
+            "final_norm": ParamDef((cfg.d_model,), P(), init="zeros",
+                                   dtype="float32"),
+        }
+        if not cfg.tie_embeddings:
+            defs["head"] = embed_def(vp, cfg.d_model, cfg.param_dtype,
+                                     cfg.fsdp_params)
+        group = {f"b{i}": self._block_defs(bt)
+                 for i, bt in enumerate(cfg.block_pattern)}
+        if cfg.n_groups > 0:
+            defs["groups"] = _stack_defs(group, cfg.n_groups)
+        defs["tail"] = {f"t{i}": self._block_defs(bt)
+                        for i, bt in enumerate(cfg.tail_blocks)}
+        if cfg.encdec:
+            enc_block = {
+                "ln1": ParamDef((cfg.d_model,), P(), init="zeros",
+                                dtype="float32"),
+                "attn": attn_defs(cfg, model_size(self.mesh),
+                                  cfg.param_dtype, cfg.fsdp_params),
+                "ln2": ParamDef((cfg.d_model,), P(), init="zeros",
+                                dtype="float32"),
+                "ffn": mlp_defs(cfg.d_model, cfg.d_ff,
+                                model_size(self.mesh), cfg.gated_mlp,
+                                cfg.param_dtype, cfg.fsdp_params),
+            }
+            defs["encoder"] = {
+                "blocks": _stack_defs(enc_block, cfg.n_enc_layers),
+                "final_norm": ParamDef((cfg.d_model,), P(), init="zeros",
+                                       dtype="float32"),
+            }
+        return defs
+
+    def abstract_params(self):
+        return pm.abstract(self.param_defs())
+
+    def param_specs(self):
+        return pm.specs(self.param_defs())
+
+    def init_params(self, seed: int = 0):
+        return pm.initialize(self.param_defs(), seed, self.mesh)
+
+    def n_params(self) -> int:
+        return pm.n_params(self.param_defs())
+
+    # -- blocks ---------------------------------------------------------------
+
+    def _theta(self, btype: str) -> float:
+        cfg = self.cfg
+        if btype == "global" and cfg.rope_theta_global:
+            return cfg.rope_theta_global
+        return cfg.rope_theta
+
+    def _block(self, btype: str, bp, h, *, positions, mode, cache, pos,
+               enc_out, prefix_len, q_chunk=512):
+        """h: residual stream (seq-sharded under SP). Returns
+        (h, new_cache, aux)."""
+        cfg, ctx = self.cfg, self.ctx
+        aux = jnp.zeros((), jnp.float32)
+        xn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
+        # fused-QKV path consumes the SP-sharded stream directly (the
+        # gather happens inside one shard_map; backward is RS, not AR)
+        fuse_qkv = (btype in _ATTN_KINDS and mode != "decode"
+                    and _sp_active(xn, ctx)
+                    and cfg.q_dim % ctx.model == 0
+                    and cfg.kv_dim % ctx.model == 0)
+        x = xn if fuse_qkv else gather_seq(xn, ctx)
+
+        new_cache: Dict[str, Any] = {}
+        c_attn = cache.get("attn") if cache else None
+        if btype in _ATTN_KINDS:
+            if mode == "prefill":
+                out, built, pre_scattered = self._prefill_attention(
+                    bp["attn"], x, btype, positions, prefix_len, c_attn,
+                    q_chunk, x_seq_sharded=fuse_qkv)
+                new_cache["attn"] = built
+            else:
+                out, nc, pre_scattered = attention_apply(
+                    bp["attn"], x, cfg, ctx, kind=btype,
+                    theta=self._theta(btype), positions=positions,
+                    prefix_len=prefix_len, q_chunk=q_chunk,
+                    cache=c_attn, pos=pos,
+                    use_rope=not cfg.encdec, x_seq_sharded=fuse_qkv)
+                if nc is not None:
+                    new_cache["attn"] = nc
+        elif btype in ("rglru", "mlstm", "slstm"):
+            fn = {"rglru": rglru_apply, "mlstm": mlstm_apply,
+                  "slstm": slstm_apply}[btype]
+            out, nc = fn(bp["mix"], x, cfg, ctx,
+                         cache.get("mix") if mode == "decode" else None,
+                         return_state=(mode == "prefill"))
+            if nc is not None:
+                new_cache["mix"] = nc
+            pre_scattered = False
+        else:
+            raise ValueError(btype)
+        h = h + (out if pre_scattered else scatter_seq(out, ctx))
+
+        # cross-attention (whisper decoder)
+        if cfg.encdec and enc_out is not None:
+            xx = gather_seq(rmsnorm(h, bp["lnx"], cfg.norm_eps), ctx)
+            cd = ctx.compute_dtype
+            ek = jnp.einsum("bfd,dn->bfn", enc_out,
+                            bp["xattn"]["wk"].astype(cd)).reshape(
+                enc_out.shape[0], -1, cfg.n_kv_heads, cfg.hd)
+            ev = jnp.einsum("bfd,dn->bfn", enc_out,
+                            bp["xattn"]["wv"].astype(cd)).reshape(
+                enc_out.shape[0], -1, cfg.n_kv_heads, cfg.hd)
+            xout, _, xps = attention_apply(
+                bp["xattn"], xx, cfg, ctx, kind="full",
+                theta=cfg.rope_theta, positions=positions,
+                kv_override=(ek, ev), use_rope=False,
+                cache={} if mode == "decode" else None, pos=pos)
+            h = h + (xout if xps else scatter_seq(xout, ctx))
+
+        if cfg.d_ff > 0:
+            xn = rmsnorm(h, bp["ln2"], cfg.norm_eps)
+            if cfg.moe:
+                y, aux = moe_apply(bp["ffn"], gather_seq(xn, ctx), cfg, ctx)
+                y = scatter_seq(y, ctx)
+            elif _sp_active(xn, ctx) and ctx.up_y == 1 \
+                    and (ctx.down_y or ctx.model) == ctx.model:
+                from repro.models.layers import mlp_apply_fused_sp
+                y = mlp_apply_fused_sp(bp["ffn"], xn, ctx, cfg.gated_mlp)
+            else:
+                y = mlp_apply(bp["ffn"], gather_seq(xn, ctx), ctx,
+                              cfg.gated_mlp)
+            h = h + y
+        return h, new_cache, aux
+
+    def _prefill_attention(self, ap, x, btype, positions, prefix_len,
+                           empty_cache, q_chunk, x_seq_sharded=False):
+        """Full-sequence flash attention + build the decode cache from the
+        computed K/V."""
+        cfg, ctx = self.cfg, self.ctx
+        out, _, pre_scattered = attention_apply(
+            ap, x, cfg, ctx, kind=btype, theta=self._theta(btype),
+            positions=positions, prefix_len=prefix_len, q_chunk=q_chunk,
+            use_rope=not cfg.encdec, x_seq_sharded=x_seq_sharded)
+        # recompute k/v once more for the cache (cheap GEMMs)
+        cd = ctx.compute_dtype
+        b, s, _ = x.shape
+        k = jnp.einsum("bsd,dn->bsn", x, ap["wk"].astype(cd)).reshape(
+            b, s, cfg.n_kv_heads, cfg.hd)
+        v = jnp.einsum("bsd,dn->bsn", x, ap["wv"].astype(cd)).reshape(
+            b, s, cfg.n_kv_heads, cfg.hd)
+        if not cfg.encdec:
+            from repro.models.layers import rope
+            k = rope(k, positions, self._theta(btype))
+        kc, vc = empty_cache["k"], empty_cache["v"]
+        w = kc.shape[1]
+        if btype == "global":
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                kc, k.astype(kc.dtype), 0, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                vc, v.astype(vc.dtype), 0, axis=1)
+        else:
+            # ring buffer: last min(S, W) positions at slots p % W
+            n = min(s, w)
+            ppos = jnp.arange(n) + (s - n)
+            slots = jnp.mod(ppos, w)
+            kc = kc.at[:, slots].set(k[:, s - n:].astype(kc.dtype))
+            vc = vc.at[:, slots].set(v[:, s - n:].astype(vc.dtype))
+        return out, dict(empty_cache, k=kc, v=vc), pre_scattered
+
+    # -- forward ---------------------------------------------------------------
+
+    def _embed_inputs(self, params, batch, mode, pos=None):
+        cfg, ctx = self.cfg, self.ctx
+        cd = ctx.compute_dtype
+        h = vocab_parallel_embed(params["embed"], batch["tokens"], ctx)
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), cd)
+        prefix_len = 0
+        if cfg.prefix_tokens and mode != "decode":
+            patches = batch["patches"].astype(cd)  # [B, P, D] (stub)
+            h = jnp.concatenate([patches, h], axis=1)
+            prefix_len = cfg.prefix_tokens
+        if cfg.encdec:
+            # sinusoidal positions for the decoder (whisper has no RoPE)
+            s = h.shape[1]
+            start = pos if (mode == "decode" and pos is not None) else 0
+            h = h + _sinusoid(start, s, cfg.d_model, cd)
+        return h, prefix_len
+
+    def _encode(self, params, frames):
+        """Whisper encoder over (stubbed) frame embeddings [B, F, D]."""
+        cfg, ctx = self.cfg, self.ctx
+        cd = ctx.compute_dtype
+        h = frames.astype(cd) + _sinusoid(0, frames.shape[1], cfg.d_model,
+                                          cd)
+        positions = jnp.arange(frames.shape[1])
+
+        def body(hh, bp):
+            x = rmsnorm(hh, bp["ln1"], cfg.norm_eps)
+            out, _, _ = attention_apply(bp["attn"], x, cfg, ctx,
+                                        kind="full", theta=cfg.rope_theta,
+                                        positions=positions,
+                                        use_rope=False)
+            hh = hh + out
+            x2 = rmsnorm(hh, bp["ln2"], cfg.norm_eps)
+            y = mlp_apply(bp["ffn"], x2, dataclasses.replace(ctx, sp=False),
+                          cfg.gated_mlp)
+            return hh + y, None
+
+        h, _ = jax.lax.scan(jax.checkpoint(body), h,
+                            params["encoder"]["blocks"])
+        return rmsnorm(h, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    def forward(self, params, batch, *, mode="train", cache=None,
+                pos=None):
+        """Returns (h_final, new_cache, aux).  h_final is seq-sharded under
+        SP (train/prefill) or [B, 1, D] (decode)."""
+        cfg, ctx = self.cfg, self.ctx
+        h, prefix_len = self._embed_inputs(params, batch, mode, pos)
+
+        enc_out = None
+        if cfg.encdec:
+            if mode == "decode":
+                enc_out = cache["enc_out"].astype(ctx.compute_dtype)
+            else:
+                enc_out = self._encode(params, batch["frames"])
+
+        if mode == "decode":
+            positions = pos + jnp.zeros((1,), jnp.int32)
+        else:
+            positions = jnp.arange(h.shape[1])
+            h = scatter_seq(h, ctx)
+
+        pattern = cfg.block_pattern
+        remat = mode == "train" and cfg.remat != "none"
+
+        def one_block(bt, hh, bp, gc):
+            return self._block(bt, bp, hh, positions=positions, mode=mode,
+                               cache=gc, pos=pos, enc_out=enc_out,
+                               prefix_len=prefix_len)
+
+        if remat:
+            # PER-BLOCK remat: during a group's backward only ONE layer's
+            # residuals are live (per-group remat keeps all p layers live —
+            # measured 45 GB/device on gemma3; see EXPERIMENTS §Perf).
+            one_block = jax.checkpoint(one_block, static_argnums=(0,))
+
+        def group_body(carry, xs):
+            hh = carry
+            gp, gcache = xs if cache is not None else (xs, None)
+            new_gc = {}
+            aux_t = jnp.zeros((), jnp.float32)
+            for i, bt in enumerate(pattern):
+                hh, nc, aux = one_block(
+                    bt, hh, gp[f"b{i}"],
+                    gcache[f"b{i}"] if gcache is not None else None)
+                new_gc[f"b{i}"] = nc
+                aux_t = aux_t + aux
+            return hh, (new_gc, aux_t)
+
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache: Dict[str, Any] = {}
+        if cfg.n_groups > 0:
+            xs = (params["groups"], cache["groups"]) if cache is not None \
+                else params["groups"]
+            h, (gcaches, auxs) = jax.lax.scan(group_body, h, xs)
+            aux_total = aux_total + jnp.sum(auxs)
+            if cache is not None or mode == "prefill":
+                new_cache["groups"] = gcaches
+
+        tail_caches = {}
+        for i, bt in enumerate(cfg.tail_blocks):
+            h, nc, aux = one_block(
+                bt, h, params["tail"][f"t{i}"],
+                cache["tail"][f"t{i}"] if cache is not None else None)
+            tail_caches[f"t{i}"] = nc
+            aux_total = aux_total + aux
+        if cache is not None or mode == "prefill":
+            new_cache["tail"] = tail_caches
+            if cfg.encdec:
+                new_cache["enc_out"] = (cache["enc_out"] if mode == "decode"
+                                        else enc_out)
+
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        return h, new_cache, aux_total
+
+    # -- entry points -----------------------------------------------------------
+
+    def head_weights(self, params):
+        return params["embed"] if self.cfg.tie_embeddings else params["head"]
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        cfg, ctx = self.cfg, self.ctx
+        h, _, aux = self.forward(params, batch, mode="train")
+        h = gather_seq(h, ctx)
+        targets = batch["targets"]
+        if cfg.prefix_tokens:
+            ignore = -jnp.ones(
+                (targets.shape[0], cfg.prefix_tokens), targets.dtype)
+            targets = jnp.concatenate([ignore, targets], axis=1)
+        nll = vocab_parallel_xent(h, self.head_weights(params), targets,
+                                  ctx, final_softcap=cfg.final_softcap)
+        if cfg.moe:
+            nll = nll + 0.01 * aux / cfg.n_layers
+        return nll
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Returns (last-token logits [B, Vp] vocab-sharded, cache).
+        ``max_len`` reserves decode headroom beyond the prompt."""
+        cfg, ctx = self.cfg, self.ctx
+        b = batch["tokens"].shape[0]
+        seq = batch["tokens"].shape[1] + (cfg.prefix_tokens or 0)
+        defs = self.cache_defs(b, max(max_len or seq, seq, 1))
+        cache = pm.initialize(defs, 0)  # traced zeros (inside jit)
+        if self.mesh.devices.size > 1:
+            from repro.core.sharding import constrain as _c
+            cache = jax.tree.map(
+                lambda x, s: _c(x, self.mesh, s), cache, pm.specs(defs))
+        h, new_cache, _ = self.forward(params, batch, mode="prefill",
+                                       cache=cache)
+        h = gather_seq(h, ctx)
+        logits = vocab_parallel_logits(h[:, -1:], self.head_weights(params),
+                                       ctx, cfg.final_softcap)
+        return logits[:, 0], new_cache
+
+    def decode_step(self, params, cache, token, pos):
+        """token [B, 1], pos scalar -> (logits [B, Vp] sharded, cache)."""
+        cfg, ctx = self.cfg, self.ctx
+        h, new_cache, _ = self.forward(params, {"tokens": token},
+                                       mode="decode", cache=cache, pos=pos)
+        logits = vocab_parallel_logits(h, self.head_weights(params), ctx,
+                                       cfg.final_softcap)
+        return logits[:, 0], new_cache
+
+    # -- caches -----------------------------------------------------------------
+
+    def _cache_bs_spec(self, batch: int):
+        dpx = dp_axes(self.mesh)
+        if self.mesh.devices.size == 1:
+            return None, None
+        if batch % max(dp_size(self.mesh), 1) == 0 and batch > 1:
+            return dpx, "model"
+        return None, tuple([*dpx, "model"])
+
+    def _block_cache_defs(self, btype: str, batch: int, max_len: int
+                          ) -> Dict[str, Any]:
+        cfg = self.cfg
+        bspec, sspec = self._cache_bs_spec(batch)
+        out: Dict[str, Any] = {}
+        if btype in _ATTN_KINDS:
+            clen = max_len if btype == "global" else min(cfg.window, max_len)
+            if sspec is not None and isinstance(sspec, tuple):
+                # keep tiny ring buffers shardable
+                total = 1
+                for a in sspec:
+                    total *= dict(zip(self.mesh.axis_names,
+                                      self.mesh.devices.shape))[a]
+                if clen % total != 0:
+                    sspec = "model"
+            spec = P(bspec, sspec, None, None)
+            out["attn"] = {
+                "k": ParamDef((batch, clen, cfg.n_kv_heads, cfg.hd), spec,
+                              init="zeros", dtype="bfloat16"),
+                "v": ParamDef((batch, clen, cfg.n_kv_heads, cfg.hd), spec,
+                              init="zeros", dtype="bfloat16"),
+            }
+        elif btype == "rglru":
+            out["mix"] = rglru_cache_defs(cfg, batch, "bfloat16")
+        elif btype == "mlstm":
+            out["mix"] = mlstm_cache_defs(cfg, batch, "bfloat16")
+        elif btype == "slstm":
+            out["mix"] = slstm_cache_defs(cfg, batch, "bfloat16")
+        return out
+
+    def cache_defs(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        group = {f"b{i}": self._block_cache_defs(bt, batch, max_len)
+                 for i, bt in enumerate(cfg.block_pattern)}
+        defs: Dict[str, Any] = {}
+        if cfg.n_groups > 0:
+            defs["groups"] = _stack_defs(group, cfg.n_groups)
+        defs["tail"] = {f"t{i}": self._block_cache_defs(bt, batch, max_len)
+                        for i, bt in enumerate(cfg.tail_blocks)}
+        if cfg.encdec:
+            defs["enc_out"] = ParamDef(
+                (batch, cfg.enc_frames, cfg.d_model), P(),
+                init="zeros", dtype="bfloat16")
+        return defs
+
+    def abstract_cache(self, batch: int, max_len: int):
+        return pm.abstract(self.cache_defs(batch, max_len))
+
+    def cache_specs(self, batch: int, max_len: int):
+        return pm.specs(self.cache_defs(batch, max_len))
+
+
+def _sinusoid(start, length, d_model, dtype):
+    pos = start + jnp.arange(length)[:, None].astype(jnp.float32)
+    half = d_model // 2
+    freq = jnp.exp(-jnp.arange(half, dtype=jnp.float32)
+                   * (math.log(10000.0) / max(half - 1, 1)))
+    ang = pos * freq[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1)[None].astype(dtype)

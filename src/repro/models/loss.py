@@ -1,0 +1,112 @@
+"""Vocab-parallel chunked cross-entropy.
+
+The vocab head is the largest single GEMM in most assigned archs (e.g.
+gemma3: 3840 x 262144).  Logits are never materialized for the full
+sequence: a remat'd scan walks sequence chunks; within a chunk, logits are
+computed against the LOCAL vocab shard and the log-sum-exp / target-logit
+terms are combined with psum over the model axis — the paper's adder-tree
+reduction applied to the softmax.  Targets < 0 are ignored (prefix/padding
+positions).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.maxeva_matmul import _shard_map
+from repro.models.layers import TPCtx
+
+
+def vocab_parallel_xent(
+    h: jnp.ndarray,            # [B, S, D] replicated over model
+    head: jnp.ndarray,         # [Vp, D] vocab(row)-sharded over model
+    targets: jnp.ndarray,      # [B, S] int32; < 0 -> ignored
+    ctx: TPCtx,
+    *,
+    chunk: int = 512,
+    final_softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    """Mean NLL over non-ignored tokens (scalar, replicated)."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nchunks = s // chunk
+
+    def per_chunk(hl, headl, tgt, md):
+        vloc = headl.shape[0]
+        logits = jnp.einsum("bcd,vd->bcv", hl.astype(jnp.float32),
+                            headl.astype(jnp.float32))
+        if final_softcap:
+            logits = final_softcap * jnp.tanh(logits / final_softcap)
+        mx = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+        if ctx.model > 1:
+            mx = jax.lax.pmax(mx, "model")
+        se = jnp.sum(jnp.exp(logits - mx[..., None]), axis=-1)
+        if ctx.model > 1:
+            se = jax.lax.psum(se, "model")
+        lse = mx + jnp.log(se)
+
+        loc = tgt - md * vloc
+        ok = (loc >= 0) & (loc < vloc)
+        locc = jnp.clip(loc, 0, vloc - 1)
+        tl = jnp.take_along_axis(logits, locc[..., None], axis=-1)[..., 0]
+        tl = tl * ok.astype(jnp.float32)
+        if ctx.model > 1:
+            tl = jax.lax.psum(tl, "model")
+
+        w = (tgt >= 0).astype(jnp.float32)
+        return jnp.sum((lse - tl) * w), jnp.sum(w)
+
+    def body(hl, headl, tgt):
+        md = jax.lax.axis_index("model") if ctx.model > 1 else 0
+
+        def step(acc, i):
+            hs = jax.lax.dynamic_slice_in_dim(hl, i * chunk, chunk, 1)
+            ts = jax.lax.dynamic_slice_in_dim(tgt, i * chunk, chunk, 1)
+            nll, w = jax.checkpoint(per_chunk)(hs, headl, ts, md)
+            return (acc[0] + nll, acc[1] + w), None
+
+        (nll, w), _ = jax.lax.scan(step, (0.0, 0.0), jnp.arange(nchunks))
+        if rs is not None:
+            nll = jax.lax.psum(nll, rs)
+            w = jax.lax.psum(w, rs)
+        return nll / jnp.maximum(w, 1.0)
+
+    from repro.core.sharding import row_axes
+    rs = row_axes(ctx.mesh, h.shape[0]) if ctx.mesh.devices.size > 1 \
+        else None
+    if ctx.mesh.devices.size == 1:
+        return body(h, head, targets)
+    return _shard_map(
+        body, ctx.mesh,
+        (P(rs, None, None), P("model", None), P(rs, None)),
+        P(),
+    )(h, head, targets)
+
+
+def vocab_parallel_logits(h: jnp.ndarray, head: jnp.ndarray, ctx: TPCtx,
+                          final_softcap: Optional[float] = None
+                          ) -> jnp.ndarray:
+    """[B, S, D] -> [B, S, Vp] (vocab-sharded over model). Serving path."""
+    if ctx.mesh.devices.size == 1:
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32), head)
+        if final_softcap:
+            logits = final_softcap * jnp.tanh(logits / final_softcap)
+        return logits
+
+    def body(hl, headl):
+        logits = jnp.einsum("bsd,vd->bsv", hl.astype(jnp.float32),
+                            headl.astype(jnp.float32))
+        if final_softcap:
+            logits = final_softcap * jnp.tanh(logits / final_softcap)
+        return logits
+
+    from repro.core.sharding import row_axes
+    rs = row_axes(ctx.mesh, h.shape[0])
+    return _shard_map(body, ctx.mesh,
+                      (P(rs, None, None), P("model", None)),
+                      P(rs, None, "model"))(h, head)

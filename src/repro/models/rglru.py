@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+  a_t = exp(-c * softplus(Lambda) * sigma(r_t)),  c = 8
+  r_t, i_t: per-channel gates from linear maps of the input.
+
+Training/prefill uses ``jax.lax.associative_scan`` (parallel prefix over
+the affine maps h -> a*h + b) — log-depth, the TPU-friendly adaptation of
+what Griffin implements as a fused GPU scan kernel.  Decode is the O(1)
+per-step update.  The temporal conv is width-``conv_width`` causal.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import TPCtx
+from repro.models.param import ParamDef
+
+_C = 8.0
+
+
+def rglru_defs(cfg: ArchConfig, model: int, dtype: str,
+               fsdp: bool) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    col = P("data", "model") if fsdp else P(None, "model")
+    row = P("model", "data") if fsdp else P("model", None)
+    return {
+        "in_x": ParamDef((d, w), col, dtype=dtype),       # recurrence branch
+        "in_g": ParamDef((d, w), col, dtype=dtype),       # gate branch
+        "conv": ParamDef((cfg.conv_width, w), P(None, "model"), dtype=dtype),
+        "w_a": ParamDef((w, w), col, dtype=dtype),        # recurrence gate
+        "w_i": ParamDef((w, w), col, dtype=dtype),        # input gate
+        "lam": ParamDef((w,), P("model"), init="lru_log", dtype="float32"),
+        "out": ParamDef((w, d), row, dtype=dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, kernel: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv over time. x [B, S, W], kernel [cw, W].
+    ``state`` [B, cw-1, W] carries the left context for decode."""
+    cw = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i][None, None]
+              for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else state
+    return out.astype(x.dtype), new_state
+
+
+def _gates(params, xc):
+    """a (log-space decay) and gated input from the conv'd branch."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc.astype(f32),
+                                  params["w_a"].astype(f32)))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xc.astype(f32),
+                                  params["w_i"].astype(f32)))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xc.astype(f32))
+    return a, b
+
+
+def rglru_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                cfg: ArchConfig, ctx: TPCtx,
+                cache: Optional[Dict[str, jnp.ndarray]] = None,
+                return_state: bool = False
+                ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """x [B, S, D] replicated-over-model -> ([B, S, D], new_cache).
+
+    cache = {'h': [B, W], 'conv': [B, cw-1, W]} for decode;
+    ``return_state`` (prefill) emits the post-sequence cache for free
+    (the scan's final element)."""
+    cd = ctx.compute_dtype
+    xb = jnp.einsum("bsd,dw->bsw", x, params["in_x"].astype(cd))
+    gb = jnp.einsum("bsd,dw->bsw", x, params["in_g"].astype(cd))
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xb, params["conv"].astype(cd), conv_state)
+    a, b = _gates(params, xc)
+
+    if cache is None:
+        # parallel prefix over affine maps: (a2,b2)o(a1,b1) = (a1a2, a2b1+b2)
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_cache = None
+        if return_state:
+            new_cache = {"h": h[:, -1], "conv": new_conv}
+    else:
+        h = a[:, 0] * cache["h"].astype(jnp.float32) + b[:, 0]
+        new_cache = dict(cache, h=h.astype(cache["h"].dtype),
+                         conv=new_conv)
+        h = h[:, None]
+
+    out = h.astype(cd) * jax.nn.gelu(gb.astype(jnp.float32)).astype(cd)
+    y = jnp.einsum("bsw,wd->bsd", out, params["out"].astype(cd))
+    return y, new_cache
+
+
+def rglru_cache_defs(cfg: ArchConfig, batch: int, dtype: str
+                     ) -> Dict[str, ParamDef]:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": ParamDef((batch, w), P(None, "model"), init="zeros",
+                      dtype="float32"),
+        "conv": ParamDef((batch, cfg.conv_width - 1, w),
+                         P(None, None, "model"), init="zeros", dtype=dtype),
+    }

@@ -1,0 +1,285 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly sequential — that is the architecture).
+
+mLSTM recurrence (per head, state C [hd, hd], n [hd], stabilizer m):
+  m_t = max(logf_t + m_{t-1}, logi_t)
+  C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) k_t v_t^T
+  n_t = exp(logf_t + m_{t-1} - m_t) n_{t-1} + exp(logi_t - m_t) k_t
+  h_t = (C_t^T q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Training/prefill runs the CHUNKWISE form: intra-chunk terms computed in
+parallel (attention-like masked matmuls), inter-chunk state carried by a
+scan over chunks — the TPU adaptation of the official fused CUDA kernels.
+Correctness is property-tested against the per-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import TPCtx, rmsnorm
+from repro.models.param import ParamDef
+from repro.models.rglru import _causal_conv
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_defs(cfg: ArchConfig, model: int, dtype: str,
+               fsdp: bool) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    w = 2 * d  # official mLSTM block: 2x up-projection
+    col = P("data", "model") if fsdp else P(None, "model")
+    row = P("model", "data") if fsdp else P("model", None)
+    return {
+        "up_x": ParamDef((d, w), col, dtype=dtype),
+        "up_g": ParamDef((d, w), col, dtype=dtype),
+        "conv": ParamDef((cfg.conv_width, w), P(None, "model"), dtype=dtype),
+        "wq": ParamDef((w, w), col, dtype=dtype),
+        "wk": ParamDef((w, w), col, dtype=dtype),
+        "wv": ParamDef((w, w), col, dtype=dtype),
+        "w_i": ParamDef((w, cfg.n_heads), P(None, None), dtype="float32"),
+        "w_f": ParamDef((w, cfg.n_heads), P(None, None), dtype="float32"),
+        "b_i": ParamDef((cfg.n_heads,), P(), init="zeros", dtype="float32"),
+        "b_f": ParamDef((cfg.n_heads,), P(), init="custom", dtype="float32",
+                        custom=lambda k: jnp.linspace(3.0, 6.0,
+                                                      cfg.n_heads)),
+        "norm": ParamDef((w,), P("model"), init="zeros", dtype="float32"),
+        "down": ParamDef((w, d), row, dtype=dtype),
+    }
+
+
+def _mlstm_chunk(carry, qc, kc, vc, logf, logi):
+    """One chunk. qc/kc/vc [B, L, H, hd]; logf/logi [B, L, H].
+    carry = (C [B,H,hd,hd], n [B,H,hd], m [B,H])."""
+    C, n, m = carry
+    b, L, h, hd = qc.shape
+    f32 = jnp.float32
+    qc, kc, vc = qc.astype(f32), kc.astype(f32), vc.astype(f32)
+    kc = kc * (hd ** -0.5)
+
+    F = jnp.cumsum(logf, axis=1)                     # [B, L, H]
+    # intra-chunk log decay matrix: D[t, s] = F_t - F_s + logi_s (s <= t)
+    logD = (F[:, :, None] - F[:, None, :]
+            + logi[:, None, :, :])                   # [B, t, s, H]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    logD = jnp.where(tri[None, :, :, None], logD, _NEG)
+
+    # inter contribution decays the carried state: g_t = F_t + m_prev
+    g = F + m[:, None]                               # [B, L, H]
+    m_t = jnp.maximum(jnp.max(logD, axis=2), g)      # [B, L, H]
+
+    intra_w = jnp.exp(logD - m_t[:, :, None])        # [B, t, s, H]
+    scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * intra_w
+    num = jnp.einsum("btsh,bshd->bthd", scores, vc)
+    # normalizer n-vector: sum_s w_{t,s} k_s
+    nvec = jnp.einsum("btsh,bshd->bthd", intra_w, kc)
+
+    inter_w = jnp.exp(g - m_t)                       # [B, L, H]
+    num = num + jnp.einsum("bthd,bhde,bth->bthe", qc, C, inter_w)
+    nvec = nvec + n[:, None] * inter_w[..., None]
+
+    qn = jnp.abs(jnp.einsum("bthd,bthd->bth", qc, nvec))
+    hout = num / jnp.maximum(qn, jnp.exp(-m_t))[..., None]
+
+    # carry update to end of chunk
+    m_new = jnp.maximum(F[:, -1] + m, jnp.max(
+        F[:, -1:, :] - F + logi, axis=1))            # [B, H]
+    wk = jnp.exp(F[:, -1:, :] - F + logi - m_new[:, None])  # [B, L, H]
+    C_new = (jnp.exp(F[:, -1] + m - m_new)[..., None, None] * C
+             + jnp.einsum("blh,blhd,blhe->bhde", wk, kc, vc))
+    n_new = (jnp.exp(F[:, -1] + m - m_new)[..., None] * n
+             + jnp.einsum("blh,blhd->bhd", wk, kc))
+    return (C_new, n_new, m_new), hout
+
+
+def mlstm_step(carry, q, k, v, logf, logi):
+    """Single-token recurrence. q/k/v [B, H, hd]; logf/logi [B, H]."""
+    C, n, m = carry
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    k = k * (k.shape[-1] ** -0.5)
+    m_new = jnp.maximum(logf + m, logi)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(logi - m_new)
+    C = fw[..., None, None] * C + iw[..., None, None] \
+        * (k[..., :, None] * v[..., None, :])
+    n = fw[..., None] * n + iw[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    qn = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n))
+    h = num / jnp.maximum(qn, jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_apply(params, x, cfg: ArchConfig, ctx: TPCtx,
+                cache: Optional[Dict[str, jnp.ndarray]] = None,
+                chunk: int = 64, return_state: bool = False):
+    """x [B, S, D] -> ([B, S, D], new_cache)."""
+    cd = ctx.compute_dtype
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    xb = jnp.einsum("bsd,dw->bsw", x, params["up_x"].astype(cd))
+    gb = jnp.einsum("bsd,dw->bsw", x, params["up_g"].astype(cd))
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xb, params["conv"].astype(cd), conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(cd)
+
+    w = xc.shape[-1]
+    hd = w // nh
+    f32 = jnp.float32
+    q = jnp.einsum("bsw,wv->bsv", xc, params["wq"].astype(cd)) \
+        .reshape(b, s, nh, hd)
+    k = jnp.einsum("bsw,wv->bsv", xc, params["wk"].astype(cd)) \
+        .reshape(b, s, nh, hd)
+    v = jnp.einsum("bsw,wv->bsv", xc, params["wv"].astype(cd)) \
+        .reshape(b, s, nh, hd)
+    logi = jnp.einsum("bsw,wh->bsh", xc.astype(f32), params["w_i"]) \
+        + params["b_i"]
+    logf = jax.nn.log_sigmoid(
+        jnp.einsum("bsw,wh->bsh", xc.astype(f32), params["w_f"])
+        + params["b_f"])
+
+    if cache is None:
+        chunk = min(chunk, s)
+        assert s % chunk == 0
+        nc = s // chunk
+
+        def step(carry, inp):
+            qc, kc, vc, lf, li = inp
+            carry, h = _mlstm_chunk(carry, qc, kc, vc, lf, li)
+            return carry, h
+
+        def r(t):  # [B, S, ...] -> [nc, B, chunk, ...]
+            return jnp.moveaxis(
+                t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
+
+        C0 = jnp.zeros((b, nh, hd, hd), f32)
+        n0 = jnp.zeros((b, nh, hd), f32)
+        m0 = jnp.full((b, nh), 0.0, f32)
+        final, hs = jax.lax.scan(step, (C0, n0, m0),
+                                 (r(q), r(k), r(v), r(logf), r(logi)))
+        h = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh, hd)
+        new_cache = None
+        if return_state:
+            new_cache = {"C": final[0], "n": final[1], "m": final[2],
+                         "conv": new_conv}
+    else:
+        carry = (cache["C"].astype(f32), cache["n"].astype(f32),
+                 cache["m"].astype(f32))
+        carry, h1 = mlstm_step(carry, q[:, 0], k[:, 0], v[:, 0],
+                               logf[:, 0], logi[:, 0])
+        h = h1[:, None]
+        new_cache = dict(cache, C=carry[0], n=carry[1], m=carry[2],
+                         conv=new_conv)
+        h = h.reshape(b, 1, nh, hd)
+
+    hflat = h.reshape(b, s if cache is None else 1, w).astype(cd)
+    hflat = rmsnorm(hflat, params["norm"], 1e-6)
+    out = hflat * jax.nn.silu(gb.astype(f32)).astype(cd)
+    y = jnp.einsum("bsw,wd->bsd", out, params["down"].astype(cd))
+    return y, new_cache
+
+
+def mlstm_cache_defs(cfg: ArchConfig, batch: int, dtype: str):
+    w = 2 * cfg.d_model
+    nh, hd = cfg.n_heads, 2 * cfg.d_model // cfg.n_heads
+    return {
+        # shard the (always 16-divisible) head_dim: nh can be tiny (4)
+        "C": ParamDef((batch, nh, hd, hd), P(None, None, "model", None),
+                      init="zeros", dtype="float32"),
+        "n": ParamDef((batch, nh, hd), P(None, None, "model"),
+                      init="zeros", dtype="float32"),
+        "m": ParamDef((batch, nh), P(), init="zeros", dtype="float32"),
+        "conv": ParamDef((batch, cfg.conv_width - 1, w),
+                         P(None, None, "model"), init="zeros", dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_defs(cfg: ArchConfig, model: int, dtype: str,
+               fsdp: bool) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    w = d
+    nh = cfg.n_heads
+    col = P("data", "model") if fsdp else P(None, "model")
+    return {
+        # input maps for z, i, f, o
+        "w_in": ParamDef((d, 4 * w), col, dtype=dtype),
+        # block-diagonal recurrent maps (per head)
+        "r": ParamDef((4, nh, w // nh, w // nh), P(), dtype="float32",
+                      scale=0.05),
+        "bias": ParamDef((4 * w,), P(), init="zeros", dtype="float32"),
+        "norm": ParamDef((w,), P("model"), init="zeros", dtype="float32"),
+        "out": ParamDef((w, d), P("model", None) if not fsdp
+                        else P("model", "data"), dtype=dtype),
+    }
+
+
+def _slstm_step(params, carry, xz):
+    """carry = (c, n, m, h) each [B, W]; xz [B, 4W] precomputed input map."""
+    c, n, m, h = carry
+    f32 = jnp.float32
+    w = c.shape[-1]
+    nh = params["r"].shape[1]
+    hh = h.reshape(h.shape[0], nh, -1)
+    rec = jnp.einsum("bhx,khxy->kbhy", hh, params["r"]).reshape(
+        4, h.shape[0], w)
+    z = jnp.tanh(xz[:, :w] + rec[0])
+    logi = xz[:, w:2 * w] + rec[1]
+    logf = jax.nn.log_sigmoid(xz[:, 2 * w:3 * w] + rec[2])
+    o = jax.nn.sigmoid(xz[:, 3 * w:] + rec[3])
+    m_new = jnp.maximum(logf + m, logi)
+    iw = jnp.exp(logi - m_new)
+    fw = jnp.exp(logf + m - m_new)
+    c = fw * c + iw * z
+    n = fw * n + iw
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_apply(params, x, cfg: ArchConfig, ctx: TPCtx,
+                cache: Optional[Dict[str, jnp.ndarray]] = None,
+                return_state: bool = False):
+    cd = ctx.compute_dtype
+    b, s, d = x.shape
+    w = d
+    f32 = jnp.float32
+    xz = (jnp.einsum("bsd,dk->bsk", x.astype(f32),
+                     params["w_in"].astype(f32)) + params["bias"])
+
+    if cache is None:
+        init = tuple(jnp.zeros((b, w), f32) for _ in range(4))
+        (c, n, m, h), hs = jax.lax.scan(
+            lambda cr, xt: _slstm_step(params, cr, xt),
+            init, jnp.moveaxis(xz, 0, 1))
+        h_seq = jnp.moveaxis(hs, 0, 1)
+        new_cache = None
+        if return_state:
+            new_cache = {"c": c, "n": n, "m": m, "h": h}
+    else:
+        carry = (cache["c"].astype(f32), cache["n"].astype(f32),
+                 cache["m"].astype(f32), cache["h"].astype(f32))
+        carry, h1 = _slstm_step(params, carry, xz[:, 0])
+        h_seq = h1[:, None]
+        new_cache = dict(cache, c=carry[0], n=carry[1], m=carry[2],
+                         h=carry[3])
+
+    h_seq = rmsnorm(h_seq.astype(cd), params["norm"], 1e-6)
+    return jnp.einsum("bsw,wd->bsd", h_seq,
+                      params["out"].astype(cd)), new_cache
+
+
+def slstm_cache_defs(cfg: ArchConfig, batch: int, dtype: str):
+    w = cfg.d_model
+    return {k: ParamDef((batch, w), P(), init="zeros", dtype="float32")
+            for k in ("c", "n", "m", "h")}

@@ -1,0 +1,14 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    abstract_opt_state,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    opt_state_specs,
+)
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "init_opt_state", "abstract_opt_state",
+    "opt_state_specs", "global_norm", "warmup_cosine", "constant",
+]

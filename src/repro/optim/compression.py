@@ -1,0 +1,97 @@
+"""int8 error-feedback gradient compression for data-parallel reduction.
+
+The wire format follows the paper's int8 pipeline: int8-quantized values,
+wider accumulation.  A shared (pmax'd) scale makes the values
+sum-compatible; the TRANSPORT is int16 so the psum is exact for up to 256
+DP shards (127 * 256 < 2^15) — a 2x wire-byte reduction vs fp32 that XLA's
+collective layer honors (an int32 transport is promoted to 4 bytes and
+saves nothing; a true 1-byte ring needs per-hop requantization, traded off
+in DESIGN.md).  The quantization residual is fed back into the next step's
+gradient (error feedback), keeping optimization intact — validated in
+tests by training the same model with and without compression.
+
+``make_dp_train_step`` builds the whole data-parallel training step as one
+shard_map: per-shard grads -> compressed psum -> replicated AdamW update.
+The error-feedback residual is genuinely per-device state and is carried
+with a leading device axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.maxeva_matmul import _shard_map
+from repro.optim.adamw import AdamWConfig, adamw_update
+
+
+def compressed_psum_mean(x: jnp.ndarray, axis,
+                         err: Optional[jnp.ndarray] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean over ``axis`` of (x + err), int8 on the wire (inside shard_map).
+    Returns (mean, new_local_err)."""
+    xf = x.astype(jnp.float32)
+    if err is not None:
+        xf = xf + err
+    absmax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(jax.lax.pmax(absmax, axis), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    new_err = xf - q.astype(jnp.float32) * scale
+    # int16 transport: exact sum for <= 256 shards, half the fp32 bytes
+    total = jax.lax.psum(q.astype(jnp.int16), axis)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis)
+    return (total.astype(jnp.float32) * scale / n.astype(jnp.float32),
+            new_err)
+
+
+def init_error_state(params: Any, n_shards: int) -> Any:
+    """Per-device EF residuals, leading device axis."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_shards, *p.shape), jnp.float32), params)
+
+
+def make_dp_train_step(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    opt_cfg: AdamWConfig,
+    mesh: Mesh,
+    axis: str = "data",
+    compression: str = "int8_ef",   # 'none' | 'int8_ef'
+):
+    """Pure-DP training step: params replicated, batch sharded over ``axis``.
+
+    step(params, opt_state, err, batch) -> (loss, params, opt_state, err)
+    """
+
+    def body(params, opt_state, err, batch_l):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch_l)
+        loss = jax.lax.pmean(loss, axis)
+        if compression == "int8_ef":
+            err_l = jax.tree.map(lambda e: e[0], err)
+            synced = jax.tree.map(
+                lambda g, e: compressed_psum_mean(g, axis, e), grads, err_l)
+            grads = jax.tree.map(lambda t: t[0], synced,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+            new_err = jax.tree.map(
+                lambda t: t[1][None], synced,
+                is_leaf=lambda t: isinstance(t, tuple))
+        else:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+            new_err = err
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return loss, params, opt_state, new_err
+
+    rep = lambda tree: jax.tree.map(lambda _: P(), tree)
+    dev0 = lambda tree: jax.tree.map(lambda _: P(axis), tree)
+
+    def step(params, opt_state, err, batch):
+        batch_specs = jax.tree.map(lambda _: P(axis), batch)
+        return _shard_map(
+            body, mesh,
+            (rep(params), rep(opt_state), dev0(err), batch_specs),
+            (P(), rep(params), rep(opt_state), dev0(err)),
+        )(params, opt_state, err, batch)
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))

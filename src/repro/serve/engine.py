@@ -1,0 +1,70 @@
+"""Batched serving engine: prefill + decode over a fixed-shape batch slot
+("continuous batching lite": fixed batch lanes, per-lane completion).
+
+The step functions are jit'd once per (batch, max_len); logits come back
+vocab-sharded over the model axis and are argmax'd shard-locally then
+combined — no full-vocab gather ever materializes on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import Model
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    greedy: bool = True
+    temperature: float = 1.0
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, scfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self._prefill = jax.jit(
+            lambda p, b, ml: model.prefill(p, b, max_len=ml),
+            static_argnums=(2,))
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def _pick(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        v = self.model.cfg.vocab
+        logits = logits[:, :v]
+        if self.scfg.greedy:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        scaled = logits / max(self.scfg.temperature, 1e-6)
+        return jax.random.categorical(key, scaled).astype(jnp.int32)
+
+    def generate(self, batch: Dict[str, jnp.ndarray], seed: int = 0
+                 ) -> np.ndarray:
+        """batch['tokens'] [B, S] -> generated tokens [B, <=max_new]."""
+        cfg, scfg = self.model.cfg, self.scfg
+        b, s = batch["tokens"].shape
+        prompt_len = s + (cfg.prefix_tokens or 0)
+        max_len = prompt_len + scfg.max_new_tokens
+        logits, cache = self._prefill(self.params, batch, max_len)
+
+        key = jax.random.PRNGKey(seed)
+        out: List[np.ndarray] = []
+        done = np.zeros((b,), bool)
+        tok = self._pick(logits, key)
+        for i in range(scfg.max_new_tokens):
+            out.append(np.asarray(tok))
+            if scfg.eos_id is not None:
+                done |= np.asarray(tok) == scfg.eos_id
+                if done.all():
+                    break
+            pos = jnp.asarray(prompt_len + i, jnp.int32)
+            logits, cache = self._decode(self.params, cache, tok[:, None],
+                                         pos)
+            key, sub = jax.random.split(key)
+            tok = self._pick(logits, sub)
+        return np.stack(out, axis=1)

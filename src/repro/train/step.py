@@ -1,0 +1,107 @@
+"""Training-step builder: loss + grads + AdamW, with full sharding specs
+for jit (used identically by the live trainer and the dry-run)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sharding import dp_axes
+from repro.models.lm import Model
+from repro.optim import AdamWConfig, adamw_update, global_norm, \
+    init_opt_state, abstract_opt_state, opt_state_specs
+
+
+def batch_specs(cfg, mesh: Mesh, kind: str) -> Dict[str, P]:
+    dpx = dp_axes(mesh)
+    specs: Dict[str, P] = {}
+    if kind in ("train", "prefill"):
+        specs["tokens"] = P(dpx, None)
+        if kind == "train":
+            specs["targets"] = P(dpx, None)
+        if cfg.prefix_tokens:
+            specs["patches"] = P(dpx, None, None)
+        if cfg.encdec:
+            specs["frames"] = P(dpx, None, None)
+    else:  # decode: [B, 1] token
+        specs["tokens"] = P(dpx, None)
+    return specs
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    microbatches: Optional[int] = None):
+    """Single optimizer step; with ``microbatches`` > 1, grads accumulate
+    over a scan of microbatches (peak activation memory / n_micro)."""
+    n_micro = microbatches if microbatches is not None \
+        else model.cfg.microbatches
+
+    def train_step(params, opt_state, batch):
+        if n_micro <= 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+
+            acc_dt = jnp.dtype(model.cfg.grad_accum_dtype)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(model.loss)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss, grads), _ = jax.lax.scan(acc_step, (0.0, g0), micro)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+        gnorm = global_norm(grads)
+        params, opt_state = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def jit_train_step(model: Model, opt_cfg: AdamWConfig,
+                   donate: bool = True):
+    mesh = model.mesh
+    pspecs = model.param_specs()
+    ospecs = opt_state_specs(pspecs, opt_cfg)
+    bspecs = batch_specs(model.cfg, mesh, "train")
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    return jax.jit(
+        make_train_step(model, opt_cfg),
+        in_shardings=(ns(pspecs), ns(ospecs), ns(bspecs)),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def jit_prefill(model: Model):
+    mesh = model.mesh
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    b = model.cfg
+    return jax.jit(
+        model.prefill,
+        in_shardings=(ns(model.param_specs()),
+                      ns(batch_specs(b, mesh, "prefill"))),
+    )
+
+
+def jit_decode_step(model: Model, batch: int, max_len: int):
+    mesh = model.mesh
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+    cspecs = model.cache_specs(batch, max_len)
+    dpx = dp_axes(mesh)
+    from repro.core.sharding import dp_size
+    tok_spec = P(dpx, None) if batch % max(dp_size(mesh), 1) == 0 \
+        and batch > 1 else P(None, None)
+    return jax.jit(
+        model.decode_step,
+        in_shardings=(ns(model.param_specs()), ns(cspecs),
+                      NamedSharding(mesh, tok_spec), None),
+        donate_argnums=(1,),
+    )

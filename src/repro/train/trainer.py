@@ -1,0 +1,162 @@
+"""Fault-tolerant training loop.
+
+Production behaviors implemented (and unit-tested with injected faults):
+  * periodic ASYNC checkpointing (atomic commits, keep-N);
+  * automatic restart-from-latest-checkpoint on step failure, with
+    bounded retries;
+  * straggler watchdog: per-step wall-time EMA; steps slower than
+    ``straggler_factor``x the EMA are logged with their step index —
+    on a real cluster this feeds the scheduler's hot-spare swap;
+  * elastic restart: ``Trainer.restore`` re-places the logical checkpoint
+    onto WHATEVER mesh the surviving devices form (see
+    checkpoint.manager); the data pipeline re-derives its stream position
+    from the restored step with zero coordination;
+  * failure injection for tests via ``fail_at_step`` /
+    ``REPRO_FAIL_AT_STEP`` (raises inside the step, exercising the
+    restore path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.models.lm import Model
+from repro.optim import AdamWConfig, init_opt_state, opt_state_specs
+from repro.train.step import jit_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    max_retries: int = 2
+    straggler_factor: float = 3.0
+    ema_alpha: float = 0.2
+    log_every: int = 10
+    fail_at_step: Optional[int] = None  # failure injection (tests)
+
+
+class StragglerWatchdog:
+    """EMA-based step-time anomaly detector."""
+
+    def __init__(self, factor: float, alpha: float):
+        self.factor = factor
+        self.alpha = alpha
+        self.ema: Optional[float] = None
+        self.events: List[Dict[str, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        slow = self.ema is not None and dt > self.factor * self.ema
+        if slow:
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+            log.warning("straggler: step %d took %.3fs (ema %.3fs)",
+                        step, dt, self.ema)
+        self.ema = dt if self.ema is None else \
+            (1 - self.alpha) * self.ema + self.alpha * dt
+        return slow
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: AdamWConfig,
+                 tcfg: TrainerConfig, pipeline_factory: Callable[[int], Any]):
+        """``pipeline_factory(start_step)`` -> iterator of (step, batch);
+        called again after every restart so data resumes deterministically.
+        """
+        self.model = model
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.pipeline_factory = pipeline_factory
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep)
+        self.watchdog = StragglerWatchdog(tcfg.straggler_factor,
+                                          tcfg.ema_alpha)
+        self.step_fn = jit_train_step(model, opt_cfg)
+        self.metrics: List[Dict[str, float]] = []
+
+    # -- state ------------------------------------------------------------------
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init_params(seed)
+        opt = init_opt_state(params, self.opt_cfg)
+        return params, opt
+
+    def restore(self):
+        """Elastic restore onto the model's (possibly new) mesh."""
+        params_like = self.model.abstract_params()
+        from repro.optim import abstract_opt_state
+        opt_like = abstract_opt_state(params_like, self.opt_cfg)
+        pspecs = self.model.param_specs()
+        ospecs = opt_state_specs(pspecs, self.opt_cfg)
+        step, (params, opt) = self.ckpt.restore(
+            None, (params_like, opt_like), self.model.mesh,
+            (pspecs, ospecs))
+        return step, params, opt
+
+    # -- loop -------------------------------------------------------------------
+
+    def run(self, seed: int = 0):
+        tcfg = self.tcfg
+        if self.ckpt.latest_step() is not None:
+            start, params, opt = self.restore()
+            log.info("resumed from checkpoint step %d", start)
+        else:
+            params, opt = self.init_state(seed)
+            start = 0
+
+        retries = 0
+        step = start
+        pipe = self.pipeline_factory(step)
+        it = iter(pipe)
+        fail_at = tcfg.fail_at_step
+        if fail_at is None and os.environ.get("REPRO_FAIL_AT_STEP"):
+            fail_at = int(os.environ["REPRO_FAIL_AT_STEP"])
+
+        while step < tcfg.steps:
+            try:
+                data_step, batch = next(it)
+                assert data_step == step, (data_step, step)
+                t0 = time.time()
+                if fail_at is not None and step == fail_at:
+                    fail_at = None  # fail once
+                    raise RuntimeError("injected node failure")
+                params, opt, m = self.step_fn(params, opt, batch)
+                loss = float(m["loss"])
+                dt = time.time() - t0
+                self.watchdog.observe(step, dt)
+                self.metrics.append({"step": step, "loss": loss, "dt": dt})
+                if step % tcfg.log_every == 0:
+                    log.info("step %d loss %.4f (%.3fs)", step, loss, dt)
+                step += 1
+                if step % tcfg.ckpt_every == 0 or step == tcfg.steps:
+                    self.ckpt.save(step, (params, opt))
+            except (RuntimeError, jax.errors.JaxRuntimeError) as e:
+                retries += 1
+                log.error("step %d failed (%s); retry %d/%d", step, e,
+                          retries, tcfg.max_retries)
+                if retries > tcfg.max_retries:
+                    raise
+                self.ckpt.wait()
+                if self.ckpt.latest_step() is not None:
+                    step, params, opt = self.restore()
+                else:
+                    params, opt = self.init_state(seed)
+                    step = 0
+                if hasattr(pipe, "close"):
+                    pipe.close()
+                pipe = self.pipeline_factory(step)
+                it = iter(pipe)
+
+        self.ckpt.wait()
+        if hasattr(pipe, "close"):
+            pipe.close()
+        return params, opt

@@ -1,0 +1,175 @@
+"""Multi-device correctness checks, run in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (set by the caller —
+never globally, per the dry-run isolation rule).
+
+Usage: python tests/_multidev_checks.py <check_name>
+Exits 0 on success; raises (non-zero exit) on failure.
+"""
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    )
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.maxeva_matmul import (  # noqa: E402
+    XYZConfig,
+    shard_weight_xyz,
+    unshard_weight_xyz,
+    xyz_matmul,
+    xyz_matmul_replicated_out,
+)
+
+
+def make_mesh():
+    from repro.launch.mesh import make_mesh as mk
+    return mk(2, 4)
+
+
+def _data(b=4, s=8, k=32, n=64, seed=0):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (b, s, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) / np.sqrt(k)
+    return x, w
+
+
+def check_weight_layout_roundtrip():
+    _, w = _data(k=32, n=64)
+    for y in (1, 2, 4):
+        w_xyz = shard_weight_xyz(w, 4, y)
+        back = unshard_weight_xyz(w_xyz, y)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(w))
+    print("ok weight_layout_roundtrip")
+
+
+def check_xyz_forward_all_schedules():
+    mesh = make_mesh()
+    x, w = _data()
+    want = np.asarray(jnp.einsum("bsk,kn->bsn", x, w))
+    for y in (1, 2, 4):
+        for sched in ("allreduce", "reduce_scatter", "ring"):
+            for layout in ("replicated", "ksharded"):
+                if y == 1 and layout == "ksharded" and sched != "allreduce":
+                    continue
+                cfg = XYZConfig(y=y, schedule=sched, x_layout=layout)
+                w_xyz = shard_weight_xyz(w, 4, y)
+                with jax.set_mesh(mesh):
+                    got = xyz_matmul(x, w_xyz, mesh=mesh, cfg=cfg)
+                np.testing.assert_allclose(
+                    np.asarray(got), want, rtol=2e-5, atol=2e-5,
+                    err_msg=f"y={y} sched={sched} layout={layout}")
+    print("ok xyz_forward_all_schedules")
+
+
+def check_replicated_out():
+    mesh = make_mesh()
+    x, w = _data()
+    want = np.asarray(jnp.einsum("bsk,kn->bsn", x, w))
+    for layout in ("replicated", "ksharded"):
+        cfg = XYZConfig(y=4, schedule="allreduce", x_layout=layout)
+        w_xyz = shard_weight_xyz(w, 4, 4)
+        with jax.set_mesh(mesh):
+            got = xyz_matmul_replicated_out(x, w_xyz, mesh=mesh, cfg=cfg)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
+                                   atol=2e-5, err_msg=layout)
+    print("ok replicated_out")
+
+
+def check_grads():
+    mesh = make_mesh()
+    x, w = _data(k=16, n=32)
+
+    for y, sched in [(1, "allreduce"), (4, "reduce_scatter"), (2, "ring"),
+                     (4, "allreduce")]:
+        cfg = XYZConfig(y=y, schedule=sched)
+        w_xyz = shard_weight_xyz(w, 4, y)
+
+        def loss_sharded(xx, ww):
+            out = xyz_matmul(xx, ww, mesh=mesh, cfg=cfg)
+            return jnp.sum(jnp.sin(out))
+
+        def loss_ref(xx, ww):
+            return jnp.sum(jnp.sin(jnp.einsum("bsk,kn->bsn", xx,
+                                              unshard_weight_xyz(ww, y))))
+
+        with jax.set_mesh(mesh):
+            gx, gw = jax.grad(loss_sharded, argnums=(0, 1))(x, w_xyz)
+        gx_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(x, w_xyz)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_r),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"gx y={y} {sched}")
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_r),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"gw y={y} {sched}")
+    print("ok grads")
+
+
+def check_mlp_composition():
+    """col-parallel up (Y=1) -> gelu -> row-parallel down (Y=model,
+    ksharded): the Megatron pair with zero intermediate resharding."""
+    mesh = make_mesh()
+    x, w1 = _data(k=32, n=64)
+    w2 = jax.random.normal(jax.random.PRNGKey(9), (64, 32), jnp.float32) / 8.0
+
+    up = XYZConfig(y=1)
+    down = XYZConfig(y=4, schedule="reduce_scatter", x_layout="ksharded")
+    w1x = shard_weight_xyz(w1, 4, 1)
+    w2x = shard_weight_xyz(w2, 4, 4)
+
+    @jax.jit
+    def mlp(xx):
+        h = xyz_matmul(xx, w1x, mesh=mesh, cfg=up)
+        h = jax.nn.gelu(h)
+        return xyz_matmul(h, w2x, mesh=mesh, cfg=down)
+
+    with jax.set_mesh(mesh):
+        got = mlp(x)
+    want = jnp.einsum("bsk,kn->bsn", jax.nn.gelu(jnp.einsum(
+        "bsk,kn->bsn", x, w1)), w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5,
+                               atol=2e-5)
+    # verify the HLO contains no all-gather between the two GEMMs beyond
+    # the reduce-scatter (composition is resharding-free)
+    txt = jax.jit(mlp).lower(x).compile().as_text()
+    assert txt.count("all-gather") <= 1, txt.count("all-gather")
+    print("ok mlp_composition")
+
+
+def check_collective_bytes_ordering():
+    """reduce_scatter must move fewer wire bytes than allreduce (the P2 <
+    P1 economics), measured from compiled HLO."""
+    from repro.launch.roofline import collective_wire_bytes
+    mesh = make_mesh()
+    x, w = _data(b=8, s=32, k=128, n=256)
+
+    def run(sched):
+        cfg = XYZConfig(y=4, schedule=sched)
+        w_xyz = shard_weight_xyz(w, 4, 4)
+        f = jax.jit(lambda xx: xyz_matmul(xx, w_xyz, mesh=mesh, cfg=cfg))
+        with jax.set_mesh(mesh):
+            comp = f.lower(x).compile()
+        return collective_wire_bytes(comp.as_text())["total_wire_bytes"]
+
+    ar = run("allreduce")
+    rs = run("reduce_scatter")
+    assert rs < ar, (rs, ar)
+    print("ok collective_bytes_ordering", rs, ar)
+
+
+CHECKS = {k[len("check_"):]: v for k, v in list(globals().items())
+          if k.startswith("check_")}
+
+if __name__ == "__main__":
+    names = sys.argv[1:] or list(CHECKS)
+    assert jax.device_count() == 8, jax.device_count()
+    for nm in names:
+        CHECKS[nm]()
+    print("ALL_OK")

@@ -1,0 +1,174 @@
+"""Per-kernel validation: sweep shapes/dtypes in interpret mode and
+assert_allclose against the pure-jnp oracles in ``kernels/ref.py``."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.matmul import matmul_pallas
+from repro.kernels.addertree import addertree_pallas
+from repro.kernels.quantize import quantize_rowwise_pallas
+from repro.kernels import ops
+
+
+def _rand(key, shape, dtype):
+    if dtype == jnp.int8:
+        return jax.random.randint(key, shape, -127, 128, jnp.int32).astype(jnp.int8)
+    return jax.random.normal(key, shape, dtype)
+
+
+MM_SHAPES = [
+    (8, 8, 8),
+    (32, 128, 32),     # the paper's int8 AIE tile
+    (32, 32, 32),      # the paper's fp32 AIE tile
+    (128, 64, 256),
+    (100, 130, 70),    # non-divisible -> exercises the padding path
+    (1, 256, 512),
+    (257, 33, 129),
+]
+MM_DTYPES = [jnp.float32, jnp.bfloat16, jnp.int8]
+
+
+@pytest.mark.parametrize("dtype", MM_DTYPES, ids=["f32", "bf16", "i8"])
+@pytest.mark.parametrize("mkn", MM_SHAPES)
+def test_matmul_matches_ref(mkn, dtype):
+    m, k, n = mkn
+    ka, kb = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+    a = _rand(ka, (m, k), dtype)
+    b = _rand(kb, (k, n), dtype)
+    got = matmul_pallas(a, b, block=(32, 32, 32), interpret=True)
+    want = ref.matmul_ref(a, b)
+    assert got.dtype == want.dtype
+    if dtype == jnp.int8:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("block", [(8, 8, 8), (16, 64, 32), (64, 16, 128)])
+def test_matmul_block_shapes(block):
+    """Planner-chosen blocks vary per GEMM; all must be numerically exact."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (96, 80), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (80, 144), jnp.float32)
+    got = matmul_pallas(a, b, block=block, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul_ref(a, b)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_out_dtype_cast():
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 64), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (64, 64), jnp.bfloat16)
+    got = matmul_pallas(a, b, block=(32, 32, 32), out_dtype=jnp.bfloat16,
+                        interpret=True)
+    assert got.dtype == jnp.bfloat16
+    want = ref.matmul_ref(a, b, jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8],
+                         ids=["f32", "bf16", "i8"])
+@pytest.mark.parametrize("s,m,n", [(2, 32, 32), (4, 64, 96), (7, 50, 33),
+                                   (3, 1, 128)])
+def test_addertree_matches_ref(s, m, n, dtype):
+    p = _rand(jax.random.PRNGKey(s + m), (s, m, n), dtype)
+    if dtype == jnp.int8:
+        got = addertree_pallas(p, block=(32, 32), out_dtype=jnp.int32,
+                               interpret=True)
+        want = ref.addertree_ref(p, jnp.int32)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        got = addertree_pallas(p, block=(32, 32), out_dtype=jnp.float32,
+                               interpret=True)
+        want = ref.addertree_ref(p, jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,n", [(8, 64), (100, 33), (256, 512), (1, 8)])
+def test_quantize_matches_ref(m, n):
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, n), jnp.float32) * 3.0
+    q, s = quantize_rowwise_pallas(x, block_rows=32, interpret=True)
+    qr, sr = ref.quantize_rowwise_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_matmul_linearity_property(m, k, n, seed):
+    """(aA) @ B == a (A @ B): the kernel is linear in its inputs."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(ka, (m, k), jnp.float32)
+    b = jax.random.normal(kb, (k, n), jnp.float32)
+    lhs = matmul_pallas(2.0 * a, b, block=(16, 16, 16), interpret=True)
+    rhs = 2.0 * matmul_pallas(a, b, block=(16, 16, 16), interpret=True)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(s=st.integers(1, 6), m=st.integers(1, 48), n=st.integers(1, 48),
+       seed=st.integers(0, 2 ** 16))
+def test_addertree_equals_sequential_adds(s, m, n, seed):
+    """The tree result equals the paper's sequential Add-kernel chain."""
+    p = jax.random.normal(jax.random.PRNGKey(seed), (s, m, n), jnp.float32)
+    got = addertree_pallas(p, block=(16, 16), out_dtype=jnp.float32,
+                           interpret=True)
+    seq = p[0]
+    for i in range(1, s):
+        seq = seq + p[i]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(seq), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 32), n=st.integers(2, 128), seed=st.integers(0, 2 ** 16),
+       scale=st.floats(1e-3, 1e3))
+def test_quantize_roundtrip_error_bound(m, n, seed, scale):
+    """|x - dequant(quant(x))| <= absmax/254 + eps, per row."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n), jnp.float32) * scale
+    q, s = ref.quantize_rowwise_ref(x)
+    back = ref.dequantize_rowwise_ref(q, s)
+    absmax = np.max(np.abs(np.asarray(x)), axis=1, keepdims=True)
+    bound = absmax / 254.0 + 1e-6
+    assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound + 1e-5)
+
+
+def test_quantized_matmul_close_to_float():
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 96), jnp.float32)
+    got = ref.quantized_matmul_ref(a, b)
+    want = a @ b
+    err = np.abs(np.asarray(got) - np.asarray(want))
+    rel = np.linalg.norm(err) / np.linalg.norm(np.asarray(want))
+    assert rel < 0.03  # int8 quantization noise
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+
+def test_ops_dispatch_xla_and_interpret_agree():
+    a = jax.random.normal(jax.random.PRNGKey(0), (40, 56), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (56, 24), jnp.float32)
+    x = ops.matmul(a, b, mode="xla")
+    p = ops.matmul(a, b, block=(16, 16, 16), mode="interpret")
+    np.testing.assert_allclose(np.asarray(x), np.asarray(p), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_ops_default_block_is_planned():
+    blk = ops.default_block(4096, 4096, 4096, "bf16")
+    assert all(v >= 128 for v in blk[1:])
+    assert blk[0] % 8 == 0

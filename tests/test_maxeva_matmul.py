@@ -1,0 +1,47 @@
+"""Sharded XYZ matmul correctness, run on an 8-device CPU mesh in a
+subprocess (the main test process must keep a single device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SCRIPT = os.path.join(_ROOT, "tests", "_multidev_checks.py")
+
+
+def _run(*checks):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, _SCRIPT, *checks],
+        capture_output=True, text=True, timeout=600, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL_OK" in r.stdout
+
+
+def test_weight_layout_roundtrip():
+    _run("weight_layout_roundtrip")
+
+
+def test_xyz_forward_all_schedules():
+    _run("xyz_forward_all_schedules")
+
+
+def test_replicated_out():
+    _run("replicated_out")
+
+
+def test_grads():
+    _run("grads")
+
+
+def test_mlp_composition():
+    _run("mlp_composition")
+
+
+def test_collective_bytes_ordering():
+    _run("collective_bytes_ordering")

@@ -1,0 +1,117 @@
+"""Validate the analytical performance model against every number the
+paper reports (Tables I-III, Fig. 8, CHARM comparisons)."""
+import pytest
+
+from repro.core.planner import ArrayConfig
+from repro.core import perf_model as pm
+
+CONFIGS = [(13, 4, 6), (10, 3, 10), (11, 4, 7), (11, 3, 9), (12, 4, 6),
+           (12, 3, 8)]
+
+
+# --- Table I ---------------------------------------------------------------
+
+def test_table1_int8_matmul_kernel():
+    t = pm.kernel_tile("int8")
+    assert t.as_tuple() == (32, 128, 32)
+    assert pm.matmul_kernel_cycles(t, "int8") == 1075
+    assert pm.matmul_kernel_efficiency(t, "int8") == pytest.approx(0.9526, abs=1e-3)
+
+
+def test_table1_fp32_matmul_kernel():
+    t = pm.kernel_tile("fp32")
+    assert t.as_tuple() == (32, 32, 32)
+    assert pm.matmul_kernel_cycles(t, "fp32") == 4329
+    # paper reports 94.70% (from the rounded 7.57 MACs/cyc); the exact
+    # latency 4329 gives 94.62% -- accept both roundings.
+    assert pm.matmul_kernel_efficiency(t, "fp32") == pytest.approx(0.947, abs=2e-3)
+
+
+def test_table1_add_kernels():
+    assert pm.add_kernel_cycles(32, 32, "int8") == 164
+    assert pm.add_kernel_cycles(32, 32, "fp32") == 167
+    assert pm.add_kernel_efficiency(32, 32, "int8") == pytest.approx(0.7805, abs=1e-3)
+    assert pm.add_kernel_efficiency(32, 32, "fp32") == pytest.approx(0.7665, abs=1e-3)
+
+
+def test_adder_tree_latency_below_matmul_latency():
+    """§IV-B/V-A: the whole (Y-1)-adder tree on one core is faster than one
+    MatMul kernel, for both precisions and Y in {3, 4}."""
+    for prec in ("int8", "fp32"):
+        mm = pm.matmul_kernel_cycles(pm.kernel_tile(prec), prec)
+        for y in (3, 4):
+            assert pm.adder_tree_cycles(y, 32, 32, prec) < mm
+
+
+# --- Tables II / III -------------------------------------------------------
+
+@pytest.mark.parametrize("prec,tol", [("fp32", 0.01), ("int8", 0.01)])
+def test_throughput_reproduces_paper_tables(prec, tol):
+    for (x, y, z) in CONFIGS:
+        d = pm.evaluate_design(ArrayConfig(x, y, z), prec)
+        paper = pm.PAPER_THROUGHPUT[(prec, x, y, z)]
+        assert d.throughput == pytest.approx(paper, rel=tol), (prec, x, y, z)
+
+
+@pytest.mark.parametrize("prec,tol", [("fp32", 0.01), ("int8", 0.015)])
+def test_power_reproduces_paper_tables(prec, tol):
+    # int8 10x3x10 is the paper's internally inconsistent row (core 47.44 +
+    # memory 19.08 != reported total 65.52); 1.5% tolerance absorbs it.
+    for (x, y, z) in CONFIGS:
+        d = pm.evaluate_design(ArrayConfig(x, y, z), prec)
+        paper = pm.PAPER_TOTAL_POWER_W[(prec, x, y, z)]
+        assert d.total_power_w == pytest.approx(paper, rel=tol), (prec, x, y, z)
+
+
+# --- Headline claims --------------------------------------------------------
+
+def test_claim_fp32_throughput_gain_over_charm():
+    best = pm.evaluate_design(ArrayConfig(13, 4, 6), "fp32")
+    gain = best.throughput / pm.CHARM["fp32"]["throughput_gflops"]
+    assert gain == pytest.approx(1.208, abs=0.01)   # +20.8%
+
+
+def test_claim_fp32_energy_gain_over_charm():
+    best = pm.evaluate_design(ArrayConfig(13, 4, 6), "fp32")
+    gain = best.energy_eff / pm.CHARM["fp32"]["energy_eff"]
+    assert gain == pytest.approx(1.204, abs=0.01)   # +20.4%
+
+
+def test_claim_int8_throughput_gain_over_charm():
+    best = pm.evaluate_design(ArrayConfig(13, 4, 6), "int8")
+    gain = best.throughput / pm.CHARM["int8"]["throughput_tops"]
+    assert gain == pytest.approx(2.19, abs=0.02)    # 2.19x
+
+
+def test_claim_peak_numbers():
+    fp32 = pm.evaluate_design(ArrayConfig(13, 4, 6), "fp32")
+    int8 = pm.evaluate_design(ArrayConfig(13, 4, 6), "int8")
+    assert fp32.throughput == pytest.approx(5442.11, rel=0.01)  # 5.44 TFLOPs
+    assert int8.throughput == pytest.approx(77.01, rel=0.01)    # 77.01 TOPs
+    assert fp32.energy_eff == pytest.approx(124.16, rel=0.01)   # GFLOPs/W
+
+
+def test_claim_mlp_inference_gain():
+    # §V-B4: +29% over CHARM on the MLP from [19].
+    ratio = (pm.CHARM["mlp_fp32"]["maxeva_gflops"]
+             / pm.CHARM["mlp_fp32"]["charm_gflops"])
+    assert ratio == pytest.approx(1.29, abs=0.01)
+
+
+# --- Fig. 8 -----------------------------------------------------------------
+
+def test_fig8_monotone_convergence():
+    cfg = ArrayConfig(13, 4, 6)
+    sizes = [256, 512, 1024, 2048, 4096, 8192]
+    tputs = [pm.throughput_vs_size(s, cfg, "fp32") for s in sizes]
+    assert all(b >= a - 1e-6 for a, b in zip(tputs, tputs[1:]))
+    peak = pm.design_throughput(cfg, "fp32")
+    # >= 2K x 2K: "almost peak performance" (§V-B4)
+    assert tputs[3] / peak > 0.93
+    assert tputs[0] / peak < 0.5  # small sizes heavily padded
+
+
+def test_fig8_int8():
+    cfg = ArrayConfig(13, 4, 6)
+    peak = pm.design_throughput(cfg, "int8")
+    assert pm.throughput_vs_size(4096, cfg, "int8") / peak > 0.93

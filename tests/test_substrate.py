@@ -1,0 +1,278 @@
+"""Substrate tests: data determinism/resume, checkpoint roundtrip +
+atomicity + corruption detection, trainer fault tolerance + straggler
+watchdog, optimizer semantics, serving consistency, HLO analyzer."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticTokenSource, TokenPipeline
+from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import make_mesh
+from repro.models.lm import Model
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh(1, 1)
+
+
+# -- data ---------------------------------------------------------------------
+
+def test_data_deterministic_and_resumable(mesh):
+    cfg = DataConfig(global_batch=4, seq_len=16, seed=3)
+    src = SyntheticTokenSource(vocab=100, seed=3)
+    p1 = TokenPipeline(src, cfg, mesh)
+    first = [next(p1) for _ in range(5)]
+    p1.close()
+    # resume at step 3: identical stream
+    p2 = TokenPipeline(src, cfg, mesh, start_step=3)
+    s, b = next(p2)
+    p2.close()
+    assert s == 3
+    np.testing.assert_array_equal(np.asarray(b["tokens"]),
+                                  np.asarray(first[3][1]["tokens"]))
+    # targets are tokens shifted by one
+    np.testing.assert_array_equal(np.asarray(first[0][1]["tokens"])[:, 1:],
+                                  np.asarray(first[0][1]["targets"])[:, :-1])
+
+
+def test_data_tokens_in_vocab(mesh):
+    cfg = DataConfig(global_batch=2, seq_len=8)
+    src = SyntheticTokenSource(vocab=50)
+    p = TokenPipeline(src, cfg, mesh)
+    _, b = next(p)
+    p.close()
+    assert int(jnp.max(b["tokens"])) < 50
+    assert int(jnp.min(b["tokens"])) >= 0
+
+
+# -- checkpoint ------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.int32)}}
+    mgr.save(5, tree, blocking=True)
+    step, out = mgr.restore(None, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree["a"]))
+
+
+def test_checkpoint_keep_n_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.zeros((2,))}
+    for s in (1, 2, 3):
+        mgr.save(s, tree, blocking=True)
+    assert mgr.all_steps() == [2, 3]
+    assert mgr.latest_step() == 3
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.arange(4.0)}
+    mgr.save(1, tree, blocking=True)
+    # corrupt the array file
+    f = os.path.join(str(tmp_path), "step_00000001", "arr_0.npy")
+    arr = np.load(f)
+    arr[0] = 999.0
+    np.save(f, arr)
+    with pytest.raises(IOError):
+        mgr.restore(None, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+
+
+def test_checkpoint_tmp_dir_ignored(tmp_path):
+    """A crash mid-write leaves a .tmp dir that restore must ignore."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": jnp.zeros((2,))}
+    mgr.save(1, tree, blocking=True)
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert mgr.latest_step() == 1
+
+
+# -- optimizer ---------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_adamw_int8_state_tracks_fp32():
+    k = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(k, (16, 64))
+    tgt = jax.random.normal(jax.random.PRNGKey(1), (16, 64))
+
+    def run(mode):
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0, grad_clip=0.0,
+                          state_mode=mode)
+        params = {"w": w0}
+        state = init_opt_state(params, cfg)
+        for _ in range(100):
+            grads = {"w": params["w"] - tgt}
+            params, state = adamw_update(params, grads, state, cfg)
+        return float(jnp.mean((params["w"] - tgt) ** 2))
+
+    fp32 = run("fp32")
+    int8 = run("int8")
+    assert fp32 < 1e-2
+    assert int8 < 5e-2  # quantized moments still converge
+
+
+def test_grad_accumulation_equivalence(mesh):
+    """1 big batch == mean of microbatches (up to fp tolerance)."""
+    from repro.train.step import make_train_step
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              compute_dtype="float32")
+    model = Model(cfg, mesh)
+    params = model.init_params(0)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt = init_opt_state(params, opt_cfg)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(k1, (4, 16), 0, cfg.vocab,
+                                          jnp.int32),
+             "targets": jax.random.randint(k2, (4, 16), 0, cfg.vocab,
+                                           jnp.int32)}
+    p1, _, m1 = jax.jit(make_train_step(model, opt_cfg, 1))(params, opt,
+                                                            batch)
+    p2, _, m2 = jax.jit(make_train_step(model, opt_cfg, 2))(params, opt,
+                                                            batch)
+    # losses per microbatch average to the full-batch value only when the
+    # token counts match per microbatch (they do here)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2)
+    assert max(jax.tree.leaves(d)) < 5e-3
+
+
+# -- trainer fault tolerance ----------------------------------------------------------
+
+def _tiny_trainer(tmp_path, mesh, steps=12, fail_at=None):
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = Model(cfg, mesh)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    tcfg = TrainerConfig(steps=steps, ckpt_every=4,
+                         ckpt_dir=str(tmp_path), keep=2, log_every=100,
+                         fail_at_step=fail_at)
+    dcfg = DataConfig(global_batch=2, seq_len=32)
+    src = SyntheticTokenSource(cfg.vocab)
+
+    def factory(start):
+        return TokenPipeline(src, dcfg, mesh, cfg, start_step=start)
+
+    return Trainer(model, opt_cfg, tcfg, factory)
+
+
+def test_trainer_loss_decreases(tmp_path, mesh):
+    tr = _tiny_trainer(tmp_path, mesh, steps=30)
+    tr.run(0)
+    losses = [m["loss"] for m in tr.metrics]
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+    assert all(np.isfinite(losses))
+
+
+def test_trainer_recovers_from_injected_failure(tmp_path, mesh):
+    tr = _tiny_trainer(tmp_path, mesh, steps=10, fail_at=6)
+    tr.run(0)
+    steps_seen = [m["step"] for m in tr.metrics]
+    # step 6 failed once, trainer restored from the step-4 checkpoint and
+    # re-ran 4..9
+    assert steps_seen.count(5) == 2
+    assert steps_seen[-1] == 9
+    assert tr.ckpt.latest_step() == 10
+
+
+def test_trainer_resume_matches_uninterrupted(tmp_path, mesh):
+    """checkpoint/restart must land on the same trajectory."""
+    a = _tiny_trainer(os.path.join(tmp_path, "a"), mesh, steps=8)
+    pa, _ = a.run(0)
+    b = _tiny_trainer(os.path.join(tmp_path, "b"), mesh, steps=4)
+    b.run(0)
+    b2 = _tiny_trainer(os.path.join(tmp_path, "b"), mesh, steps=8)
+    pb, _ = b2.run(0)
+    d = max(jax.tree.leaves(jax.tree.map(
+        lambda x, y: float(jnp.max(jnp.abs(
+            x.astype(jnp.float32) - y.astype(jnp.float32)))), pa, pb)))
+    assert d < 2e-2, d
+
+
+def test_straggler_watchdog_flags_slow_steps():
+    from repro.train.trainer import StragglerWatchdog
+    wd = StragglerWatchdog(factor=3.0, alpha=0.2)
+    for s in range(10):
+        wd.observe(s, 0.1)
+    assert not wd.events
+    wd.observe(10, 1.0)  # 10x slower
+    assert len(wd.events) == 1 and wd.events[0]["step"] == 10
+
+
+# -- serving ------------------------------------------------------------------------
+
+def test_serve_engine_greedy_matches_manual_decode(mesh):
+    from repro.serve.engine import ServeConfig, ServeEngine
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              compute_dtype="float32")
+    model = Model(cfg, mesh)
+    params = model.init_params(0)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(0), (2, 16),
+                                          0, cfg.vocab, jnp.int32)}
+    eng = ServeEngine(model, params, ServeConfig(max_new_tokens=4))
+    out = eng.generate(batch)
+    assert out.shape == (2, 4)
+    # manual: teacher-forced forward over prompt+generated must reproduce
+    # the same greedy choices
+    toks = batch["tokens"]
+    for i in range(3):
+        full = jnp.concatenate([toks, jnp.asarray(out[:, :i + 1])], axis=1)
+        h, _, _ = model.forward(params, {"tokens": full}, mode="train")
+        from repro.models.loss import vocab_parallel_logits
+        ref = vocab_parallel_logits(h[:, -1:], model.head_weights(params),
+                                    model.ctx)[:, 0, :cfg.vocab]
+        np.testing.assert_array_equal(np.argmax(np.asarray(ref), -1),
+                                      out[:, i + 1])
+
+
+# -- HLO analyzer ------------------------------------------------------------------
+
+def test_hlo_analyzer_counts_loop_trips():
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    w = jnp.zeros((8, 64, 64))
+    x = jnp.zeros((64, 64))
+    scanned = jax.jit(lambda x, w: jax.lax.scan(body, x, w)[0])
+    txt = scanned.lower(x, w).compile().as_text()
+    out = analyze_hlo(txt)
+    assert out["flops"] == 8 * 2 * 64 ** 3
+
+
+def test_hlo_analyzer_nested_loops():
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    def inner(c, w):
+        return jnp.tanh(c @ w), None
+
+    def outer(c, ws):
+        c2, _ = jax.lax.scan(inner, c, ws)
+        return c2, None
+
+    x = jnp.zeros((32, 32))
+    ws = jnp.zeros((3, 5, 32, 32))
+    f = jax.jit(lambda x, ws: jax.lax.scan(outer, x, ws)[0])
+    out = analyze_hlo(f.lower(x, ws).compile().as_text())
+    assert out["flops"] == 3 * 5 * 2 * 32 ** 3
