@@ -1,0 +1,190 @@
+"""Fused-epilogue and collective-matmul benchmark.
+
+Two measurements, both on this host (XLA CPU stand-in; the Pallas path
+compiles natively on TPU):
+
+1. fused_epilogue/*: wall-clock of the GEMM with its epilogue (bias +
+   gelu + bf16 cast) fused into ONE jitted dispatch vs. the unfused
+   sequence (a jitted GEMM whose fp32 accumulator round-trips through
+   device memory, then a separately jitted elementwise epilogue).  The
+   derived column reports the perf_model's predicted HBM-byte savings.
+
+2. ring_overlap/*: the overlapped collective matmul ('ring' schedule) vs
+   the barrier reduce_scatter on an 8-device CPU mesh, run in a
+   subprocess so this process keeps a single device.  The subprocess also
+   asserts the two schedules agree BIT-FOR-BIT at fp32 (the determinism
+   guarantee of the shared chunk-GEMM structure).
+
+Run directly for a human-readable report:
+
+    PYTHONPATH=src python benchmarks/fused_epilogue.py
+"""
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# tier-1 shapes (matches tpu_matmul.py)
+SHAPES = [(512, 512, 512), (1024, 1024, 1024), (2048, 2048, 2048),
+          (4096, 512, 4096)]
+
+
+def _time_us_interleaved(fns, args, iters=20, max_rounds=None):
+    """Min-of-N for each fn, rounds interleaved so background load on a
+    shared host hits all candidates equally.  The min is the estimator:
+    on an oversubscribed container the median is contention, not work.
+    Sampling is adaptive — it stops early once no candidate's min has
+    improved for ``iters`` consecutive rounds."""
+    for fn in fns:
+        jax.block_until_ready(fn(*args))  # compile + warm
+    best = [float("inf")] * len(fns)
+    stale = 0
+    for _ in range(max_rounds or 3 * iters):
+        improved = False
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            dt = (time.perf_counter() - t0) * 1e6
+            if dt < best[i] * 0.999:
+                improved = True
+            best[i] = min(best[i], dt)
+        stale = 0 if improved else stale + 1
+        if stale >= iters:
+            break
+    return best
+
+
+def fused_vs_unfused_rows(passes=2):
+    from repro.core.perf_model import fused_epilogue_savings
+    from repro.kernels import ops
+    from repro.kernels.epilogue import Epilogue, apply_epilogue
+
+    ep = Epilogue(bias=True, activation="gelu", out_dtype=jnp.bfloat16)
+    timed = []
+    for m, k, n in SHAPES:
+        key = jax.random.PRNGKey(m + n)
+        ka, kb, kc = jax.random.split(key, 3)
+        a = jax.random.normal(ka, (m, k), jnp.float32)
+        b = jax.random.normal(kb, (k, n), jnp.float32)
+        bias = jax.random.normal(kc, (n,), jnp.float32)
+
+        fused = jax.jit(lambda a, b, bias: ops.matmul(
+            a, b, mode="xla", epilogue=ep, bias=bias))
+
+        # unfused: the GEMM and the epilogue are SEPARATE dispatches, so
+        # the fp32 accumulator is materialized between them
+        gemm = jax.jit(lambda a, b: ops.matmul(a, b, mode="xla"))
+        tail = jax.jit(lambda acc, bias: apply_epilogue(acc, ep, bias=bias))
+
+        def unfused(a, b, bias):
+            return tail(gemm(a, b), bias)
+
+        timed.append((m, k, n, fused, unfused, (a, b, bias)))
+
+    # several temporally separated passes over all shapes, min across
+    # passes: contention bursts on a shared host can outlast one shape's
+    # whole measurement window, but rarely recur on the same shape twice
+    best = {}
+    for _ in range(passes):
+        for m, k, n, fused, unfused, args in timed:
+            iters = 12 if m * k * n <= 2 ** 30 else 10
+            us_f, us_u = _time_us_interleaved([fused, unfused], args,
+                                              iters=iters)
+            bf, bu = best.get((m, k, n), (float("inf"), float("inf")))
+            best[(m, k, n)] = (min(bf, us_f), min(bu, us_u))
+
+    out = []
+    for m, k, n, *_ in timed:
+        us_f, us_u = best[(m, k, n)]
+        sav = fused_epilogue_savings(m, n, ep)
+        # 2% margin = the noise floor of min-of-N on this shared host;
+        # the fused path does strictly less memory work (the modeled
+        # bytes_saved below), so a "loss" inside the margin is noise
+        out.append((
+            f"fused_epilogue/{m}x{k}x{n}", us_f,
+            f"unfused_us={us_u:.1f};speedup={us_u / max(us_f, 1e-9):.2f}x;"
+            f"model_bytes_saved={int(sav['bytes_saved'])};"
+            f"fused_le_unfused={us_f <= us_u * 1.02}"))
+    return out
+
+
+_RING_SUBPROC = r"""
+import time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.maxeva_matmul import XYZConfig, shard_weight_xyz, xyz_matmul
+from repro.core.sharding import use_mesh
+from repro.launch.mesh import make_mesh
+
+mesh = make_mesh(2, 4)
+MODEL = 4
+
+def bench(m, k, n, y):
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(kx, (8, m // 8, k), jnp.float32)
+    w = jax.random.normal(kw, (k, n), jnp.float32) / np.sqrt(k)
+    w_xyz = shard_weight_xyz(w, MODEL, y)
+    outs, times, fns = {}, {}, {}
+    for sched in ("reduce_scatter", "ring"):
+        cfg = XYZConfig(y=y, schedule=sched)
+        fns[sched] = jax.jit(
+            lambda xx, cfg=cfg: xyz_matmul(xx, w_xyz, mesh=mesh, cfg=cfg))
+        times[sched] = float("inf")
+    with use_mesh(mesh):
+        for sched, f in fns.items():
+            outs[sched] = np.asarray(f(x))  # compile + warm
+        for _ in range(7):  # interleaved min-of-N (noisy shared host)
+            for sched, f in fns.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(f(x))
+                times[sched] = min(times[sched],
+                                   (time.perf_counter() - t0) * 1e6)
+    bitwise = np.array_equal(outs["ring"], outs["reduce_scatter"])
+    assert bitwise, f"ring != reduce_scatter bitwise at fp32 ({m}x{k}x{n} y={y})"
+    print(f"RING,{m}x{k}x{n}/y{y},{times['ring']:.2f},"
+          f"rs_us={times['reduce_scatter']:.2f};bitwise_fp32={bitwise}")
+
+for (m, k, n) in [(512, 512, 512), (1024, 1024, 1024), (2048, 2048, 2048),
+                  (4096, 512, 4096)]:
+    for y in (2, 4):
+        bench(m, k, n, y)
+print("RING_OK")
+"""
+
+
+def ring_overlap_rows():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run([sys.executable, "-c", _RING_SUBPROC],
+                       capture_output=True, text=True, timeout=1200,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "RING_OK" in r.stdout
+    out = []
+    for line in r.stdout.splitlines():
+        if line.startswith("RING,"):
+            _, name, us, derived = line.split(",", 3)
+            out.append((f"ring_overlap/{name}", float(us), derived))
+    return out
+
+
+def rows():
+    return fused_vs_unfused_rows(passes=3) + ring_overlap_rows()
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    print("name,us_per_call,derived")
+    ok = True
+    for name, us, derived in rows():
+        print(f"{name},{us:.2f},{derived}")
+        if "fused_le_unfused=False" in derived:
+            ok = False
+    print("ALL_OK" if ok else "FUSED_SLOWER_THAN_UNFUSED")
+    sys.exit(0 if ok else 1)

@@ -5,11 +5,11 @@ import sys
 def main() -> None:
     sys.path.insert(0, "src")
     from benchmarks import table1_kernels, table23_array, fig8_sizes, \
-        tpu_matmul, roofline_report
+        tpu_matmul, roofline_report, fused_epilogue
 
     print("name,us_per_call,derived")
     for mod in (table1_kernels, table23_array, fig8_sizes, tpu_matmul,
-                roofline_report):
+                roofline_report, fused_epilogue):
         for name, us, derived in mod.rows():
             print(f"{name},{us:.2f},{derived}")
 

@@ -33,9 +33,29 @@ Reduction schedules (placement-pattern analogues, §IV-D):
                       materializes the full N/Z block, then keeps its slice.
   'reduce_scatter'  — P2 analogue: strictly fewer wire bytes ((Y-1)/Y vs
                       2(Y-1)/Y) and the output lands pre-sliced.
-  'ring'            — beyond-paper: chunked ring reduce-scatter built from
-                      ppermute so XLA can overlap each hop with the next
-                      partial-GEMM chunk (collective matmul).
+  'ring'            — beyond-paper: a TRUE collective matmul.  The local
+                      GEMM is split into Y N-chunk GEMMs and each chunk's
+                      ppermute hop is interleaved with the next chunk's
+                      GEMM, so XLA's latency-hiding scheduler overlaps
+                      compute with communication (§IV-C ping-pong applied
+                      to the wire).
+
+Determinism guarantee: all y>1 schedules build their local partial from
+the SAME per-N-chunk GEMMs and reduce contributions in ascending
+y-position order, so the schedule choice never changes numerics — 'ring'
+matches 'reduce_scatter' bit-for-bit at fp32, and the planner is free to
+switch schedules step-to-step (the placement-pattern analogue: P1 and P2
+compute identical results).
+
+Fused epilogues: ``XYZConfig.epilogue`` (a ``kernels.epilogue.Epilogue``)
+runs bias/activation/residual/cast/quantize on the GEMM output without an
+extra HBM round trip.  With Y == 1 the epilogue runs inside the Pallas
+kernel's store phase; with Y > 1 the nonlinear steps must follow the
+adder-tree reduction, so they run on the reduced shard inside the same
+shard_map body (XLA fuses them into the collective's consumer).  Bias is
+passed replicated ``[N]`` and sliced per shard; residual matches the
+OUTPUT sharding.  ``quantize`` emits per-N-shard rowwise scales:
+``(q [..., N], scale [..., model])``.
 """
 from __future__ import annotations
 
@@ -48,6 +68,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.sharding import dp_axes, model_size
 from repro.kernels import ops as kops
+from repro.kernels.epilogue import Epilogue, apply_epilogue
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +79,7 @@ class XYZConfig:
     schedule: str = "reduce_scatter"  # 'allreduce' | 'reduce_scatter' | 'ring'
     x_layout: str = "replicated"      # 'replicated' (broadcast) | 'ksharded'
     out_dtype: Optional[jnp.dtype] = None
+    epilogue: Optional[Epilogue] = None   # fused store-phase epilogue
 
     def z(self, model: int) -> int:
         assert model % self.y == 0, (model, self.y)
@@ -121,54 +143,105 @@ def _slice_k_block(x2: jnp.ndarray, yid, y: int, model: int) -> jnp.ndarray:
     return xb.reshape(rows, k // y)
 
 
-def _local_matmul(x2d: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-    return kops.matmul(x2d, w, out_dtype=jnp.float32)
+def _local_matmul(x2d: jnp.ndarray, w: jnp.ndarray, *,
+                  out_dtype=jnp.float32, epilogue: Optional[Epilogue] = None,
+                  bias=None, residual=None):
+    return kops.matmul(x2d, w, out_dtype=out_dtype, epilogue=epilogue,
+                       bias=bias, residual=residual)
 
 
-def _ring_reduce_scatter(partial: jnp.ndarray, axis: str, groups,
-                         y: int) -> jnp.ndarray:
-    """Chunked ring reduce-scatter over the y-subgroup via ppermute.
+def _chunk_gemm(x2: jnp.ndarray, wl: jnp.ndarray, c, chunk: int,
+                wire_dtype) -> jnp.ndarray:
+    """GEMM against N-chunk ``c`` of the local weight shard; the wire cast
+    is fused into the kernel's store phase (bitwise identical to casting
+    the fp32 accumulator afterwards).  ``c`` may be traced."""
+    wc = jax.lax.dynamic_slice_in_dim(wl, c * chunk, chunk, axis=-1)
+    return kops.matmul(x2, wc, out_dtype=wire_dtype)
 
-    ``partial`` is [rows, Nz]; returns [rows, Nz/Y] — the device's y-chunk,
-    matching psum_scatter(..., tiled=True).  Chunk c starts at device
-    position c+1, walks the ring accumulating, lands at position c.
+
+def _partial_chunks(x2: jnp.ndarray, wl: jnp.ndarray, y: int,
+                    wire_dtype) -> jnp.ndarray:
+    """The local partial as a concat of per-N-chunk GEMMs — the SAME chunk
+    GEMMs the 'ring' schedule issues, so every schedule sees bitwise
+    identical local contributions (cross-schedule determinism)."""
+    nz = wl.shape[-1]
+    chunk = nz // y
+    parts = [_chunk_gemm(x2, wl, c, chunk, wire_dtype) for c in range(y)]
+    return jnp.concatenate(parts, axis=-1)
+
+
+def _rotation_pairs(groups, y: int, s: int):
+    """ppermute pairs rotating each y-subgroup by ``s`` positions."""
+    if groups is None:
+        return [(i, (i + s) % y) for i in range(y)]
+    pairs = []
+    for g in groups:
+        for i, src in enumerate(g):
+            pairs.append((src, g[(i + s) % len(g)]))
+    return pairs
+
+
+def _ring_collective_matmul(x2: jnp.ndarray, wl: jnp.ndarray, axis: str,
+                            groups, y: int, wire_dtype) -> jnp.ndarray:
+    """Overlapped collective matmul (the 'ring' schedule).
+
+    The local [rows, Nz] GEMM is split into Y N-chunks.  In round ``s``
+    (s = 1..y-1) each device ships its GEMM for chunk ``yid + s`` straight
+    to that chunk's owner (a rotation-by-s ppermute within the y-subgroup)
+    and issues the NEXT chunk's GEMM before consuming the hop, so the
+    compiler can overlap the wire transfer with the MXU work — the §IV-C
+    ping-pong discipline applied to inter-chip traffic.  Wire bytes equal
+    the classic ring reduce-scatter: (Y-1)/Y of the partial.
+
+    The owner buffers contributions by source y-position and reduces in
+    ascending rank order — the association XLA's reduce-scatter uses — so
+    the result matches 'reduce_scatter' bit-for-bit at fp32.
     """
     md = jax.lax.axis_index(axis)
     yid = jax.lax.rem(md, y)
-    nz = partial.shape[-1]
+    rows = x2.shape[0]
+    nz = wl.shape[-1]
+    assert nz % y == 0, (nz, y)
     chunk = nz // y
-    chunks = jnp.stack(
-        [jax.lax.dynamic_slice_in_dim(partial, c * chunk, chunk, axis=-1)
-         for c in range(y)],
-        axis=0,
-    )  # [y, rows, chunk]
 
-    if groups is None:
-        pairs = [(i, (i + 1) % y) for i in range(y)]
-    else:
-        pairs = []
-        for g in groups:
-            for i, src in enumerate(g):
-                pairs.append((src, g[(i + 1) % len(g)]))
+    buf = jnp.zeros((y, rows, chunk), wire_dtype)
+    # own contribution to the chunk this device keeps (no hop)
+    buf = jax.lax.dynamic_update_index_in_dim(
+        buf, _chunk_gemm(x2, wl, yid, chunk, wire_dtype), yid, 0)
+    send = _chunk_gemm(x2, wl, jax.lax.rem(yid + 1, y), chunk, wire_dtype)
+    for s in range(1, y):
+        recv = jax.lax.ppermute(send, axis, _rotation_pairs(groups, y, s))
+        if s + 1 < y:
+            # issue round s+1's GEMM before consuming round s's hop: the
+            # chunk GEMM has no data dependence on the in-flight permute
+            send = _chunk_gemm(x2, wl, jax.lax.rem(yid + s + 1, y), chunk,
+                               wire_dtype)
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, recv, jax.lax.rem(yid - s + y, y), 0)
 
-    def take(idx):
-        return jax.lax.dynamic_index_in_dim(chunks, idx, axis=0,
-                                            keepdims=False)
-
-    acc = take(jax.lax.rem(yid + y - 1, y))
-    for step in range(1, y):
-        acc = jax.lax.ppermute(acc, axis, pairs)
-        acc = acc + take(jax.lax.rem(yid + 2 * y - 1 - step, y))
-    return acc
+    # rank-order reduction over source y-positions (fp32, like XLA's RS)
+    acc = buf[0].astype(jnp.float32)
+    for i in range(1, y):
+        acc = acc + buf[i].astype(jnp.float32)
+    return acc.astype(wire_dtype)
 
 
 def _shard_map(body, mesh, in_specs, out_specs):
-    try:
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    except TypeError:  # older spelling
-        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_rep=False)
+    from repro.core.sharding import shard_map_compat
+    return shard_map_compat(body, mesh, in_specs, out_specs)
+
+
+def _check_epilogue_operands(ep: Optional[Epilogue], bias, residual):
+    """Fail fast (outside the shard_map trace) on spec/operand mismatch."""
+    if ep is None:
+        assert bias is None and residual is None, (
+            "bias/residual operands require an XYZConfig.epilogue")
+        return
+    if ep.bias:
+        assert bias is not None, "epilogue.bias set but no bias operand"
+    if ep.residual:
+        assert residual is not None, (
+            "epilogue.residual set but no residual operand")
 
 
 def xyz_matmul(
@@ -178,21 +251,41 @@ def xyz_matmul(
     mesh: Mesh,
     cfg: XYZConfig,
     batch_sharded: bool = True,
-) -> jnp.ndarray:
-    """out[..., N] = x[..., K] @ W, distributed per the XYZ plan.
+    bias: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+):
+    """out[..., N] = epilogue(x[..., K] @ W), distributed per the XYZ plan.
 
     ``w_xyz`` is in xyz layout ([model, K/Y, N/Z], sharded on dim 0).
     Output is N-sharded over the model axis in natural chunk order; ``x``
     is row-sharded over the data axes (X) and either replicated over model
     ('replicated' — the broadcast) or K-sharded in natural order
     ('ksharded' — a previous layer's output).
+
+    ``bias`` is replicated ``[N]``; ``residual`` matches the OUTPUT
+    (N-sharded over model).  With ``cfg.epilogue.quantize`` the return is
+    ``(q [..., N] int8, scale [..., model] f32)`` with per-N-shard rowwise
+    scales.
     """
     model = model_size(mesh)
+    ep = cfg.epilogue
+    _check_epilogue_operands(ep, bias, residual)
     if model == 1:
         w = unshard_weight_xyz(w_xyz, cfg.y)
         lead = x.shape[:-1]
-        out = _local_matmul(x.reshape(-1, x.shape[-1]), w)
-        return out.astype(cfg.out_dtype or x.dtype).reshape(*lead, -1)
+        x2 = x.reshape(-1, x.shape[-1])
+        if ep is None:
+            out = _local_matmul(x2, w)
+            return out.astype(cfg.out_dtype or x.dtype).reshape(*lead, -1)
+        ep1 = dataclasses.replace(
+            ep, out_dtype=ep.out_dtype or cfg.out_dtype or x.dtype)
+        res2 = residual.reshape(-1, residual.shape[-1]) \
+            if residual is not None else None
+        out = _local_matmul(x2, w, epilogue=ep1, bias=bias, residual=res2)
+        if ep1.quantize:
+            q, s = out
+            return (q.reshape(*lead, -1), s.reshape(*lead, -1))
+        return out.reshape(*lead, -1)
 
     y, z = cfg.y, cfg.z(model)
     from repro.core.sharding import row_axes
@@ -205,13 +298,30 @@ def xyz_matmul(
 
     ygroups = _y_groups(model, y)
     zgroups = _z_groups(model, y)
+    wire_dtype = cfg.out_dtype or x.dtype
+    n_total = w_xyz.shape[-1] * z          # global N
+    nloc_out = n_total // model            # every device emits N-chunk md
 
-    def body(xl, wl):
+    def _finish(out2, md, res2):
+        """Post-reduction epilogue on the device's [rows, N/model] shard."""
+        if ep is None or (ep.is_identity and ep.out_dtype is None):
+            return out2.astype(wire_dtype)
+        b_loc = jax.lax.dynamic_slice_in_dim(
+            bias, md * nloc_out, nloc_out, axis=-1) if ep.bias else None
+        return apply_epilogue(out2, dataclasses.replace(
+            ep, out_dtype=ep.out_dtype or wire_dtype), bias=b_loc,
+            residual=res2)
+
+    def body(*args):
+        xl, wl = args[0], args[1]
+        res_l = args[2] if (ep is not None and ep.residual) else None
         wl = wl[0]  # [K/Y, N/Z]
         md = jax.lax.axis_index("model")
         yid = jax.lax.rem(md, y)
         lead = xl.shape[:-1]
         x2 = xl.reshape(-1, xl.shape[-1])
+        res2 = res_l.reshape(-1, res_l.shape[-1]) if res_l is not None \
+            else None
 
         if cfg.x_layout == "replicated":
             x2 = _slice_k_block(x2, yid, y, model)
@@ -222,32 +332,60 @@ def xyz_matmul(
             x2 = jax.lax.all_gather(x2, "model", axis_index_groups=zgroups,
                                     axis=1, tiled=True)
 
-        # cast to the output dtype BEFORE the reduction: the collective's
-        # wire format (and its AD transpose buffers) stay 16-bit; XLA's
-        # all-reduce promotion still accumulates in fp32 internally.
-        partial = _local_matmul(x2, wl).astype(cfg.out_dtype or x.dtype)
-
         nz = wl.shape[-1]
         if y == 1:
-            out = partial
-        elif cfg.schedule == "allreduce":
-            red = jax.lax.psum(partial, "model", axis_index_groups=ygroups)
-            out = jax.lax.dynamic_slice_in_dim(red, yid * (nz // y), nz // y,
-                                               axis=-1)
-        elif cfg.schedule == "reduce_scatter":
-            out = jax.lax.psum_scatter(
-                partial, "model", scatter_dimension=partial.ndim - 1,
-                axis_index_groups=ygroups, tiled=True)
-        elif cfg.schedule == "ring":
-            out = _ring_reduce_scatter(partial, "model", ygroups, y)
+            # no reduction: the WHOLE epilogue fuses into the kernel's
+            # store phase (bias sliced to this device's N-block).
+            if ep is None:
+                out = _local_matmul(x2, wl, out_dtype=wire_dtype)
+            else:
+                ep1 = dataclasses.replace(
+                    ep, out_dtype=ep.out_dtype or wire_dtype)
+                b_loc = jax.lax.dynamic_slice_in_dim(
+                    bias, md * nloc_out, nloc_out, axis=-1) \
+                    if ep.bias else None
+                out = _local_matmul(x2, wl, epilogue=ep1, bias=b_loc,
+                                    residual=res2)
         else:
-            raise ValueError(cfg.schedule)
+            # the wire format (and its AD transpose buffers) stays 16-bit
+            # when out_dtype says so; the rank-order reduction upcasts.
+            if cfg.schedule == "allreduce":
+                partial = _partial_chunks(x2, wl, y, wire_dtype)
+                red = jax.lax.psum(partial, "model",
+                                   axis_index_groups=ygroups)
+                out = jax.lax.dynamic_slice_in_dim(
+                    red, yid * (nz // y), nz // y, axis=-1)
+            elif cfg.schedule == "reduce_scatter":
+                partial = _partial_chunks(x2, wl, y, wire_dtype)
+                out = jax.lax.psum_scatter(
+                    partial, "model", scatter_dimension=partial.ndim - 1,
+                    axis_index_groups=ygroups, tiled=True)
+            elif cfg.schedule == "ring":
+                out = _ring_collective_matmul(x2, wl, "model", ygroups, y,
+                                              wire_dtype)
+            else:
+                raise ValueError(cfg.schedule)
+            if ep is not None:
+                out = _finish(out, md, res2)
 
-        out = out.astype(cfg.out_dtype or x.dtype)
+        if ep is not None and ep.quantize:
+            q, s = out
+            return (q.reshape(*lead, -1), s.reshape(*lead, -1))
+        out = out.astype(ep.out_dtype if ep is not None and ep.out_dtype
+                         else wire_dtype)
         return out.reshape(*lead, -1)
 
-    return _shard_map(body, mesh, (x_spec, P("model", None, None)),
-                      out_spec)(x, w_xyz)
+    in_specs = [x_spec, P("model", None, None)]
+    operands = [x, w_xyz]
+    if ep is not None and ep.residual:
+        assert residual is not None
+        in_specs.append(P(row_spec, *mid, "model"))
+        operands.append(residual)
+    if ep is not None and ep.quantize:
+        out_specs = (out_spec, P(row_spec, *mid, "model"))
+    else:
+        out_specs = out_spec
+    return _shard_map(body, mesh, tuple(in_specs), out_specs)(*operands)
 
 
 def xyz_matmul_replicated_out(
@@ -257,33 +395,63 @@ def xyz_matmul_replicated_out(
     mesh: Mesh,
     cfg: XYZConfig,
     batch_sharded: bool = True,
-) -> jnp.ndarray:
+    bias: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+):
     """Row-parallel variant with fully replicated (over model) output:
     Y = model, Z = 1, one psum/ring-allreduce — the classic Megatron
     down-projection.  Used when the next op needs the full feature
-    dimension on every device (residual adds on replicated activations)."""
+    dimension on every device (residual adds on replicated activations).
+
+    The epilogue (bias [N], residual [.., N] replicated) is applied after
+    the psum on every replica — still inside the shard_map body, so XLA
+    fuses it into the all-reduce consumer."""
     model = model_size(mesh)
+    ep = cfg.epilogue
+    _check_epilogue_operands(ep, bias, residual)
     if model == 1:
         return xyz_matmul(x, w_xyz, mesh=mesh, cfg=cfg,
-                          batch_sharded=batch_sharded)
+                          batch_sharded=batch_sharded, bias=bias,
+                          residual=residual)
     assert cfg.y == model, "replicated-out requires Y == model"
     from repro.core.sharding import row_axes
     row_spec = row_axes(mesh, x.shape[0]) if batch_sharded else None
     mid = [None] * (x.ndim - 2)
     x_spec = P(row_spec, *mid,
                "model" if cfg.x_layout == "ksharded" else None)
-    out_spec = P(row_spec, *mid, None)
+    wire_dtype = cfg.out_dtype or x.dtype
 
-    def body(xl, wl):
+    def body(*args):
+        xl, wl = args[0], args[1]
+        res_l = args[2] if (ep is not None and ep.residual) else None
         wl = wl[0]
         md = jax.lax.axis_index("model")
         lead = xl.shape[:-1]
         x2 = xl.reshape(-1, xl.shape[-1])
         if cfg.x_layout == "replicated":
             x2 = _slice_k_block(x2, md, model, model)
-        partial = _local_matmul(x2, wl).astype(cfg.out_dtype or x.dtype)
+        # wire cast fused into the kernel's store phase
+        partial = _local_matmul(x2, wl, out_dtype=wire_dtype)
         out = jax.lax.psum(partial, "model")
+        if ep is not None:
+            res2 = res_l.reshape(-1, res_l.shape[-1]) if res_l is not None \
+                else None
+            out = apply_epilogue(out, dataclasses.replace(
+                ep, out_dtype=ep.out_dtype or wire_dtype), bias=bias,
+                residual=res2)
+            if ep.quantize:
+                q, s = out
+                return (q.reshape(*lead, -1), s.reshape(*lead, -1))
         return out.reshape(*lead, -1)
 
-    return _shard_map(body, mesh, (x_spec, P("model", None, None)),
-                      out_spec)(x, w_xyz)
+    in_specs = [x_spec, P("model", None, None)]
+    operands = [x, w_xyz]
+    if ep is not None and ep.residual:
+        assert residual is not None
+        in_specs.append(P(row_spec, *mid, None))
+        operands.append(residual)
+    if ep is not None and ep.quantize:
+        out_specs = (P(row_spec, *mid, None), P(row_spec, *mid, None))
+    else:
+        out_specs = P(row_spec, *mid, None)
+    return _shard_map(body, mesh, tuple(in_specs), out_specs)(*operands)

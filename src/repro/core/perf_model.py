@@ -233,6 +233,37 @@ def throughput_vs_size(size: int, cfg: ArrayConfig, precision: str,
     return design_throughput(cfg, precision, device, tile) * useful / padded_work
 
 
+# ---------------------------------------------------------------------------
+# TPU-mode: fused-epilogue HBM savings (the §IV-C ping-pong analogue)
+# ---------------------------------------------------------------------------
+
+
+def fused_epilogue_savings(m: int, n: int, epilogue,
+                           device=None) -> Dict[str, float]:
+    """Bytes and roofline seconds the fused epilogue saves for an [m, n]
+    GEMM output vs. the unfused write + read-back + write sequence.
+
+    The paper's single-kernel efficiency rests on partials never touching
+    slow memory (§IV-C ping-pong buffers, §IV-B on-array adder tree); the
+    TPU analogue is the fp32 accumulator round trip through HBM that the
+    ``Epilogue`` spec deletes.  Consumed by ``core.planner`` when scoring
+    blocks/schedules and surfaced by ``benchmarks/fused_epilogue.py``.
+    """
+    from repro.core.device_model import TPU_V5E
+    from repro.core.planner import epilogue_hbm_bytes
+    device = device or TPU_V5E
+    unfused = epilogue_hbm_bytes(m, n, epilogue, fused=False)
+    fused = epilogue_hbm_bytes(m, n, epilogue, fused=True)
+    saved = unfused - fused
+    return {
+        "bytes_unfused": float(unfused),
+        "bytes_fused": float(fused),
+        "bytes_saved": float(saved),
+        "seconds_saved": saved / device.hbm_bw,
+        "savings_frac": saved / max(unfused, 1),
+    }
+
+
 def mlp_inference_gflops(layer_dims: List[int], batch: int,
                          cfg: ArrayConfig, precision: str = "fp32") -> float:
     """End-to-end MLP MatMul throughput under the Fig. 8 padding model.

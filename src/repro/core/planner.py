@@ -194,6 +194,30 @@ def pnr_feasible(cfg: ArrayConfig, device: AIEDevice = AIE_VC1902) -> bool:
 # ---------------------------------------------------------------------------
 
 
+def epilogue_hbm_bytes(m: int, n: int, epilogue=None,
+                       fused: bool = True) -> int:
+    """HBM bytes the GEMM's output stage moves for an ``[m, n]`` result.
+
+    fused:   the kernel stores the finished epilogue output once (plus the
+             quantize scale column and any bias/residual operand reads).
+    unfused: the kernel writes the fp32 accumulator, and a separate
+             elementwise op reads it back and writes the final output —
+             the 2 * 4 * m * n round trip the fusion deletes (the paper's
+             §IV-C discipline of never letting partials touch slow
+             memory, applied to the epilogue).
+    """
+    if epilogue is None:
+        return 4 * m * n if fused else 3 * 4 * m * n
+    out_b = m * n * epilogue.out_itemsize()
+    if epilogue.quantize:
+        out_b += m * 4  # scale column
+    operand_b = (n * 4 if epilogue.bias else 0) + (
+        m * n * epilogue.out_itemsize() if epilogue.residual else 0)
+    if fused:
+        return out_b + operand_b
+    return 2 * 4 * m * n + out_b + operand_b
+
+
 @dataclasses.dataclass(frozen=True)
 class TPUBlockPlan:
     """Pallas block choice for one GEMM executed per-chip."""
@@ -229,7 +253,15 @@ class XYZShardPlan:
 
     @property
     def est_step_s(self) -> float:
-        return max(self.est_compute_s, self.est_hbm_s, self.est_collective_s)
+        """Step time under the schedule's overlap model: the 'ring'
+        collective matmul interleaves chunk GEMMs with ppermute hops, so
+        compute and wire overlap (max); the barrier schedules serialize
+        the collective after the local GEMM (sum)."""
+        if self.schedule == "ring":
+            return max(self.est_compute_s, self.est_hbm_s,
+                       self.est_collective_s)
+        return max(self.est_hbm_s,
+                   self.est_compute_s + self.est_collective_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -249,6 +281,7 @@ def plan_tpu_block(
     dtype: str = "bf16",
     device: TPUDevice = TPU_V5E,
     accum_bytes: int = 4,
+    epilogue=None,
 ) -> TPUBlockPlan:
     """Single-kernel level on TPU: pick the Pallas block (bm, bk, bn).
 
@@ -274,21 +307,39 @@ def plan_tpu_block(
 
     best: Optional[TPUBlockPlan] = None
     dim_cap = 4096
+    full_row = epilogue is not None and epilogue.quantize
+    if full_row:
+        # rowwise scale needs the whole row in one block: the kernel runs
+        # with bn = ceil128(n) regardless of the plan, so plan (and
+        # account VMEM for) exactly that block.  With the block covering
+        # all of N, A-reuse is maximal and eq. 2's bm bound is waived —
+        # the fp32 accumulator row dominates VMEM instead.
+        bn_candidates = [max(device.mxu_dim, 128 * ((n + 127) // 128))]
+    else:
+        bn_candidates = [bn for bn in _pow2_range(device.mxu_dim, dim_cap)
+                         if bn <= max(n, device.mxu_dim) * 2]
     for bm in _pow2_range(device.sublane, dim_cap):
         if bm > max(m, device.sublane) * 2:
             continue
-        for bn in _pow2_range(device.mxu_dim, dim_cap):
-            if bn > max(n, device.mxu_dim) * 2:
-                continue
+        for bn in bn_candidates:
             for bk in _pow2_range(device.mxu_dim, dim_cap):
                 if bk > max(k, device.mxu_dim) * 2:
                     continue
                 # eq. 2 analog: HBM streaming must keep up with the MXU,
                 # unless the dimension is exhausted (block covers it).
-                if bn < min(io_min, n) or bm < min(io_min, m):
+                if bn < min(io_min, n) or (not full_row
+                                           and bm < min(io_min, m)):
                     continue
                 # eq. 6 analog: double-buffered in-blocks + accumulator.
                 vmem = 2 * (bm * bk + bk * bn) * ebytes + bm * bn * accum_bytes
+                if epilogue is not None:
+                    # fused-epilogue operands share the pipeline: a bias
+                    # row and/or a double-buffered residual tile join the
+                    # working set (the store phase reads them in VMEM).
+                    if epilogue.bias:
+                        vmem += bn * 4
+                    if epilogue.residual:
+                        vmem += 2 * bm * bn * ebytes
                 if vmem > device.vmem_budget:
                     continue
                 macs = bm * bk * bn
@@ -326,6 +377,7 @@ def plan_tpu_shard(
     model_axis: str = "model",
     a_sharded_on_model: bool = False,
     prefer_schedule: Optional[str] = None,
+    epilogue=None,
 ) -> XYZShardPlan:
     """Array-level XYZ search on TPU (eq. 7-9 analog).
 
@@ -350,10 +402,15 @@ def plan_tpu_shard(
             m_loc = max(1, m // x)
             # per-device compute (eq. 1 analog at array scale)
             comp = 2.0 * m_loc * (k // y) * (n // z) / flops
-            # per-device HBM traffic: activation in + weight shard + out
-            hbm = (
-                m_loc * (k // y) + (k // y) * (n // z) + m_loc * (n // z)
-            ) * ebytes / device.hbm_bw
+            # per-device HBM traffic: activation in + weight shard, plus
+            # the output stage.  A fused epilogue writes the finished
+            # output once; the unfused baseline would round-trip the fp32
+            # accumulator (epilogue_hbm_bytes accounts for the savings).
+            in_bytes = (m_loc * (k // y) + (k // y) * (n // z)) * ebytes
+            out_bytes = epilogue_hbm_bytes(m_loc, n // z, epilogue,
+                                           fused=True) \
+                if epilogue is not None else m_loc * (n // z) * ebytes
+            hbm = (in_bytes + out_bytes) / device.hbm_bw
             # wire bytes (PLIO analog):
             #  * A broadcast over Z (paper: A_{x,y} broadcast Z times) --
             #    charged only if A arrives sharded over the model axis;
@@ -365,9 +422,16 @@ def plan_tpu_shard(
                 wire += (z - 1) / z * a_bytes / device.ici_bw_per_link
             if y > 1:
                 wire += _ring_collective_s(c_bytes, y, device)
-            sched = prefer_schedule or (
-                "none" if y == 1 else ("reduce_scatter" if z == 1 else "allreduce")
-            )
+            sched = prefer_schedule
+            if sched is None:
+                if y == 1:
+                    sched = "none"
+                elif wire >= 0.1 * comp:
+                    # reduction time is material: the overlapped collective
+                    # matmul hides it behind the chunked local GEMM
+                    sched = "ring"
+                else:
+                    sched = "reduce_scatter" if z == 1 else "allreduce"
             cand = XYZShardPlan(x, y, z, sched, wire, comp, hbm)
             if best is None or cand.est_step_s < best.est_step_s:
                 best = cand
@@ -391,5 +455,6 @@ def plan_tpu_matmul(
     m_loc = max(1, m // shard.x_shards)
     k_loc = max(1, k // shard.y_shards)
     n_loc = max(1, n // shard.z_shards)
-    block = plan_tpu_block(m_loc, k_loc, n_loc, dtype, device)
+    block = plan_tpu_block(m_loc, k_loc, n_loc, dtype, device,
+                           epilogue=shard_kwargs.get("epilogue"))
     return MatmulPlan(m, k, n, dtype, block, shard)

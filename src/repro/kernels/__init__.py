@@ -1,6 +1,7 @@
 # Pallas compute hot-spots the paper optimizes: the MatMul kernel itself
 # (§IV-C1), the adder-tree Add kernel (§IV-B), and the int8 quantizer
 # feeding the paper's int8 pipeline.
+from repro.kernels.epilogue import Epilogue, apply_epilogue
 from repro.kernels.ops import (
     addertree,
     dequantize_rowwise,
@@ -11,6 +12,8 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
+    "Epilogue",
+    "apply_epilogue",
     "matmul",
     "addertree",
     "quantize_rowwise",

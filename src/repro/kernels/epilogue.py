@@ -1,0 +1,119 @@
+"""Declarative fused-GEMM epilogue spec, shared by every backend.
+
+The paper keeps partial products out of slow memory by reducing them
+on-array (the adder tree, §IV-B) and ping-pong buffering tiles in local
+memory (§IV-C).  The TPU analogue of the remaining leak is the GEMM
+*epilogue*: bias add, activation, residual add, output cast, and rowwise
+int8 quantization were separate XLA ops, so every matmul wrote its fp32
+accumulator to HBM and a second op read it back.  An ``Epilogue`` spec
+lets the Pallas kernel apply all of them on the VMEM accumulator tile in
+the store phase — one HBM write instead of write + read + write.
+
+``apply_epilogue`` is the single implementation of the spec's semantics.
+The Pallas kernel calls it on the accumulator *tile*; the XLA reference
+path (``kernels.ref.matmul_fused_ref``) calls it on the full accumulator
+matrix.  Because both run the same jnp ops in fp32, the two paths are
+numerically identical by construction.
+
+Application order (all math in fp32 — or the int32 accumulator is first
+upcast when any step beyond the cast is requested):
+
+    acc -> (+ bias) -> activation -> (+ residual) -> cast | rowwise-int8
+
+With ``quantize=True`` the epilogue emits ``(q int8 [M, N], scale f32
+[M, 1])`` as the kernel's two outputs and ``out_dtype`` is ignored.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+_ACTIVATIONS = ("none", "gelu", "silu", "relu")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Static (hashable) description of a fused GEMM store phase.
+
+    bias:       add a ``[N]`` bias row (operand supplied at call time).
+    activation: 'none' | 'gelu' | 'silu' | 'relu', applied in fp32.
+    residual:   add a ``[M, N]`` residual (operand supplied at call time).
+    out_dtype:  storage dtype of the single output (None -> accumulator
+                dtype).  Ignored when ``quantize`` is set.
+    quantize:   rowwise symmetric int8 quantization; the GEMM emits
+                ``(q, scale)`` instead of one output.
+    """
+
+    bias: bool = False
+    activation: str = "none"
+    residual: bool = False
+    out_dtype: Optional[Any] = None
+    quantize: bool = False
+
+    def __post_init__(self):
+        assert self.activation in _ACTIVATIONS, self.activation
+
+    @property
+    def is_identity(self) -> bool:
+        """True when the epilogue is nothing but the accumulator cast."""
+        return not (self.bias or self.residual or self.quantize
+                    or self.activation != "none")
+
+    @property
+    def n_outputs(self) -> int:
+        return 2 if self.quantize else 1
+
+    def out_itemsize(self, acc_dtype=jnp.float32) -> int:
+        """Bytes per output element actually stored to HBM (the quantize
+        scale column is amortized over N and ignored here)."""
+        if self.quantize:
+            return 1
+        return jnp.dtype(self.out_dtype or acc_dtype).itemsize
+
+
+def _activate(x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    if activation == "relu":
+        return jax.nn.relu(x)
+    return x
+
+
+def apply_epilogue(
+    acc: jnp.ndarray,
+    ep: Epilogue,
+    bias: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Apply ``ep`` to an accumulator (tile or full matrix).
+
+    ``acc`` is the 32-bit GEMM accumulator.  ``bias`` broadcasts over rows
+    (shape ``[N]`` or ``[1, N]``); ``residual`` matches ``acc``.  Returns
+    the cast output, or ``(q, scale)`` under ``quantize``.
+    """
+    if ep.is_identity:
+        return acc.astype(ep.out_dtype) if ep.out_dtype else acc
+
+    x = acc.astype(jnp.float32)
+    if ep.bias:
+        assert bias is not None, "Epilogue.bias set but no bias operand"
+        b = bias.astype(jnp.float32)
+        x = x + (b if b.ndim == x.ndim else b[None, :])
+    x = _activate(x, ep.activation)
+    if ep.residual:
+        assert residual is not None, (
+            "Epilogue.residual set but no residual operand")
+        x = x + residual.astype(jnp.float32)
+
+    if ep.quantize:
+        absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        scale = (jnp.maximum(absmax, 1e-12) / 127.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+
+    return x.astype(ep.out_dtype or acc.dtype)

@@ -1,5 +1,5 @@
-"""Blocked MatMul Pallas kernel — the TPU adaptation of the paper's
-single-AIE MatMul kernel (§IV-C1).
+"""Blocked MatMul Pallas kernel with fused epilogues — the TPU adaptation
+of the paper's single-AIE MatMul kernel (§IV-C1).
 
 The AIE kernel computes an ``M x K x N`` tile chosen so that (a) the vector
 unit runs near peak, (b) streaming the tile in/out does not outrun the
@@ -12,6 +12,31 @@ buffering that Fig. 5 of the paper builds by hand.
 
 Accumulation is always 32-bit (fp32 / int32), matching the paper's int8
 pipeline with int32 accumulators.
+
+Fused epilogues (the ``Epilogue`` spec, ``kernels.epilogue``)
+-------------------------------------------------------------
+MaxEVA's efficiency comes from never letting partial results touch slow
+memory: partial products ping-pong through local memory (§IV-C, Fig. 5)
+and are reduced on-array by the adder tree (§IV-B) before a single PLIO
+write-out.  The TPU analogue of that discipline is applying the GEMM
+epilogue — bias add, gelu/silu/relu, residual add, output cast, rowwise
+int8 quantize — on the VMEM accumulator tile in the kernel's store phase,
+instead of writing the fp32 accumulator to HBM and reading it back in a
+separate XLA op.  Declaratively:
+
+    ep = Epilogue(bias=True, activation="gelu", out_dtype=jnp.bfloat16)
+    y = matmul_pallas(a, b, block=blk, epilogue=ep, bias=bias_row)
+
+    epq = Epilogue(activation="silu", quantize=True)
+    q, scale = matmul_pallas(a, b, block=blk, epilogue=epq)
+
+Semantics are defined once in ``kernels.epilogue.apply_epilogue``; the XLA
+reference path (``kernels.ref.matmul_fused_ref``) calls the same function
+on the full accumulator, so both paths are numerically identical.
+
+Constraint: ``quantize`` computes a full-row absmax, so the N dimension
+must not be blocked — the kernel pads N to one block (``bn = N_padded``)
+and grids over M and K only, exactly like ``kernels.quantize``.
 """
 from __future__ import annotations
 
@@ -23,12 +48,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.epilogue import Epilogue, apply_epilogue
 from repro.kernels.ref import accum_dtype
 
 
-def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, out_dtype):
+def _matmul_kernel(*refs, k_steps: int, out_dtype, epilogue: Epilogue,
+                   has_bias: bool, has_residual: bool):
     """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis; the
-    fp32/int32 accumulator tile lives in VMEM scratch across K steps."""
+    fp32/int32 accumulator tile lives in VMEM scratch across K steps.  The
+    epilogue runs on the accumulator tile at the final K step (the store
+    phase), so the only HBM write is the finished output."""
+    refs = list(refs)
+    a_ref, b_ref = refs[:2]
+    pos = 2
+    bias_ref = refs[pos] if has_bias else None
+    pos += int(has_bias)
+    res_ref = refs[pos] if has_residual else None
+    pos += int(has_residual)
+    out_refs = refs[pos:-1]
+    acc_ref = refs[-1]
 
     @pl.when(pl.program_id(2) == 0)
     def _zero():
@@ -40,7 +78,21 @@ def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int, out_dtype):
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _store():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
+        acc = acc_ref[...]
+        if epilogue.is_identity:
+            out_refs[0][...] = acc.astype(out_dtype)
+            return
+        out = apply_epilogue(
+            acc, epilogue,
+            bias=bias_ref[...] if has_bias else None,
+            residual=res_ref[...] if has_residual else None,
+        )
+        if epilogue.quantize:
+            q, s = out
+            out_refs[0][...] = q
+            out_refs[1][...] = s
+        else:
+            out_refs[0][...] = out.astype(out_dtype)
 
 
 def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
@@ -53,7 +105,8 @@ def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block", "out_dtype", "interpret", "cost_hint"),
+    static_argnames=("block", "out_dtype", "interpret", "cost_hint",
+                     "epilogue"),
 )
 def matmul_pallas(
     a: jnp.ndarray,
@@ -63,27 +116,70 @@ def matmul_pallas(
     out_dtype=None,
     interpret: bool = False,
     cost_hint: bool = True,
-) -> jnp.ndarray:
-    """C[M, N] = A[M, K] @ B[K, N] via the blocked Pallas kernel.
+    epilogue: Optional[Epilogue] = None,
+    bias: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+):
+    """C[M, N] = epilogue(A[M, K] @ B[K, N]) via the blocked Pallas kernel.
 
     Inputs are zero-padded to block multiples (the paper's Fig. 8 padding
-    model) and the result is sliced back.
+    model) and the result is sliced back.  With ``epilogue.quantize`` the
+    return value is ``(q int8 [M, N], scale f32 [M, 1])``; otherwise a
+    single ``[M, N]`` array in the epilogue/out dtype.
     """
     assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
+    ep = epilogue or Epilogue()
     m, k = a.shape
     _, n = b.shape
     bm, bk, bn = block
     acc = accum_dtype(a.dtype)
-    out_dtype = out_dtype or acc
+    out_dtype = ep.out_dtype or out_dtype or acc
 
     ap = _pad_to(a, bm, bk)
+    if ep.quantize:
+        # rowwise scale needs the whole row in one tile: N is one block
+        # (lane-aligned), exactly like kernels.quantize — zero-pad columns
+        # cannot raise a row's absmax.
+        bn = _ceil_mult(n, 128)
     bp = _pad_to(b, bk, bn)
     mp, kp = ap.shape
     np_ = bp.shape[1]
     grid = (mp // bm, np_ // bn, kp // bk)
 
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+        pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+    ]
+    operands = [ap, bp]
+    if ep.bias:
+        assert bias is not None and bias.shape[-1] == n, (
+            "epilogue.bias requires a [N] bias operand")
+        b2 = bias.reshape(1, n)
+        b2 = jnp.pad(b2, ((0, 0), (0, np_ - n))) if np_ != n else b2
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+        operands.append(b2)
+    if ep.residual:
+        assert residual is not None and residual.shape == (m, n), (
+            "epilogue.residual requires a [M, N] residual operand")
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)))
+        operands.append(_pad_to(residual, bm, bn))
+
+    if ep.quantize:
+        out_specs = [
+            pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)),
+        ]
+        out_shape = [
+            jax.ShapeDtypeStruct((mp, np_), jnp.int8),
+            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
+        ]
+    else:
+        out_specs = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
+        out_shape = jax.ShapeDtypeStruct((mp, np_), out_dtype)
+
     kernel = functools.partial(
-        _matmul_kernel, k_steps=grid[2], out_dtype=out_dtype
+        _matmul_kernel, k_steps=grid[2], out_dtype=out_dtype, epilogue=ep,
+        has_bias=ep.bias, has_residual=ep.residual,
     )
     params = {}
     cp_cls = getattr(pltpu, "CompilerParams", None) or getattr(
@@ -95,25 +191,38 @@ def matmul_pallas(
         )
     cost = None
     if cost_hint:
+        # the fused path stores the finished epilogue output ONCE; the
+        # unfused sequence would add an fp32 accumulator write + read.
+        out_bytes = mp * np_ * ep.out_itemsize(acc)
+        if ep.quantize:
+            out_bytes += mp * 4  # scale column
+        extra_in = (np_ * 4 if ep.bias else 0) + (
+            mp * np_ * jnp.dtype(residual.dtype).itemsize
+            if ep.residual else 0)
         cost = pl.CostEstimate(
             flops=2 * mp * kp * np_,
             bytes_accessed=(mp * kp * ap.dtype.itemsize
                             + kp * np_ * bp.dtype.itemsize
-                            + mp * np_ * jnp.dtype(out_dtype).itemsize),
-            transcendentals=0,
+                            + out_bytes + extra_in),
+            transcendentals=(mp * np_
+                             if ep.activation in ("gelu", "silu") else 0),
         )
     out = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, bn), acc)],
         interpret=interpret,
         cost_estimate=cost,
         **params,
-    )(ap, bp)
+    )(*operands)
+    if ep.quantize:
+        q, s = out
+        return q[:m, :n], s[:m]
     return out[:m, :n]
+
+
+def _ceil_mult(v: int, a: int) -> int:
+    return a * ((v + a - 1) // a)

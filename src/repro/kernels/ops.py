@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.planner import plan_tpu_block
 from repro.kernels import ref
+from repro.kernels.epilogue import Epilogue
 from repro.kernels.matmul import matmul_pallas
 from repro.kernels.addertree import addertree_pallas
 from repro.kernels.quantize import quantize_rowwise_pallas
@@ -41,9 +42,29 @@ def kernel_mode() -> str:
     return _MODE
 
 
+# Planner dtype keys for the dtypes the paper pipeline uses natively; any
+# other dtype falls back by itemsize (2-byte floats plan like bf16, 1-byte
+# ints like int8, everything else like fp32) instead of raising KeyError.
+_PLANNER_DTYPE = {"bfloat16": "bf16", "float32": "fp32", "int8": "int8"}
+
+
+def planner_dtype_key(dtype) -> str:
+    if isinstance(dtype, str) and dtype in ("bf16", "fp32", "int8"):
+        return dtype  # already a planner key
+    dt = jnp.dtype(dtype)
+    key = _PLANNER_DTYPE.get(dt.name)
+    if key is not None:
+        return key
+    if dt.kind in ("i", "u") and dt.itemsize == 1:
+        return "int8"
+    if dt.kind == "f" and dt.itemsize == 2:
+        return "bf16"
+    return "fp32"
+
+
 @functools.lru_cache(maxsize=None)
 def default_block(m: int, k: int, n: int, dtype: str) -> Tuple[int, int, int]:
-    b = plan_tpu_block(m, k, n, dtype)
+    b = plan_tpu_block(m, k, n, planner_dtype_key(dtype))
     return (b.bm, b.bk, b.bn)
 
 
@@ -54,17 +75,35 @@ def matmul(
     out_dtype=None,
     block: Optional[Tuple[int, int, int]] = None,
     mode: Optional[str] = None,
-) -> jnp.ndarray:
-    """Planned, blocked matmul (2D x 2D).  Higher-rank callers flatten the
-    leading dims (activation rows are the M axis, as in the paper)."""
+    epilogue: Optional[Epilogue] = None,
+    bias: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+):
+    """Planned, blocked matmul (2D x 2D) with an optional fused epilogue.
+    Higher-rank callers flatten the leading dims (activation rows are the
+    M axis, as in the paper).
+
+    With ``epilogue`` the bias/activation/residual/cast/quantize sequence
+    runs in the kernel's store phase (one HBM write); the XLA path applies
+    the same spec via ``ref.matmul_fused_ref`` (identical semantics, and
+    XLA fuses the elementwise tail into the dot consumer)."""
     mode = mode or kernel_mode()
+    if epilogue is None:
+        assert bias is None and residual is None, (
+            "bias/residual operands require an Epilogue spec "
+            "(e.g. epilogue=Epilogue(bias=True))")
     if mode == "xla":
-        return ref.matmul_ref(a, b, out_dtype)
+        if epilogue is None:
+            return ref.matmul_ref(a, b, out_dtype)
+        if out_dtype is not None and epilogue.out_dtype is None:
+            # honor the out_dtype argument exactly like the kernel path
+            import dataclasses
+            epilogue = dataclasses.replace(epilogue, out_dtype=out_dtype)
+        return ref.matmul_fused_ref(a, b, epilogue, bias=bias,
+                                    residual=residual)
     if block is None:
-        dt = {"bfloat16": "bf16", "float32": "fp32", "int8": "int8"}[
-            str(a.dtype)
-        ]
-        block = default_block(a.shape[0], a.shape[1], b.shape[1], dt)
+        block = default_block(a.shape[0], a.shape[1], b.shape[1],
+                              str(a.dtype))
         # never exceed the (padded) problem itself
         block = (
             min(block[0], _round_pow2_up(a.shape[0])),
@@ -72,7 +111,9 @@ def matmul(
             min(block[2], _round_pow2_up(b.shape[1])),
         )
     return matmul_pallas(
-        a, b, block=block, out_dtype=out_dtype, interpret=(mode == "interpret")
+        a, b, block=block, out_dtype=out_dtype,
+        interpret=(mode == "interpret"), epilogue=epilogue, bias=bias,
+        residual=residual,
     )
 
 

@@ -17,7 +17,12 @@ _ACCUM = {
 
 
 def accum_dtype(dtype) -> jnp.dtype:
-    return _ACCUM[jnp.dtype(dtype)]
+    """32-bit accumulator for a given input dtype; unlisted dtypes fall
+    back by kind (ints -> int32, floats -> fp32) instead of KeyError."""
+    dt = jnp.dtype(dtype)
+    if dt in _ACCUM:
+        return _ACCUM[dt]
+    return jnp.int32 if dt.kind in ("i", "u") else jnp.float32
 
 
 def matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
@@ -27,6 +32,19 @@ def matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
     acc = accum_dtype(a.dtype)
     out_dtype = out_dtype or acc
     return jnp.dot(a, b, preferred_element_type=acc).astype(out_dtype)
+
+
+def matmul_fused_ref(a: jnp.ndarray, b: jnp.ndarray, epilogue,
+                     bias: Optional[jnp.ndarray] = None,
+                     residual: Optional[jnp.ndarray] = None):
+    """epilogue(A @ B): the XLA mirror of the fused-epilogue Pallas kernel.
+
+    Shares ``kernels.epilogue.apply_epilogue`` with the kernel's store
+    phase, so both paths are numerically identical by construction.
+    Returns ``(q, scale)`` under ``epilogue.quantize``, else one array."""
+    from repro.kernels.epilogue import apply_epilogue
+    acc = jnp.dot(a, b, preferred_element_type=accum_dtype(a.dtype))
+    return apply_epilogue(acc, epilogue, bias=bias, residual=residual)
 
 
 def addertree_ref(partials: jnp.ndarray,

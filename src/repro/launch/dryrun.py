@@ -15,6 +15,7 @@ import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, runnable_cells  # noqa: E402
+from repro.core.sharding import use_mesh  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.roofline import collective_wire_bytes, roofline_terms  # noqa: E402
 from repro.launch.specs import input_specs  # noqa: E402
@@ -81,7 +82,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     model = Model(cfg, mesh)
     opt_cfg = AdamWConfig(state_mode=cfg.opt_state_mode)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if cell.kind == "train":
             fn = make_train_step(model, opt_cfg)
             aparams = model.abstract_params()

@@ -11,13 +11,14 @@ from typing import Optional, Sequence, Tuple
 import jax
 from jax.sharding import Mesh
 
+from repro.core.sharding import make_mesh_compat
+
 
 def _mk(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     # Auto axis types: the framework mixes GSPMD-constrained jit code with
     # explicit shard_map blocks (the XYZ matmul), which requires Auto.
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    # make_mesh_compat degrades gracefully on JAX without AxisType.
+    return make_mesh_compat(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:

@@ -101,9 +101,15 @@ def fused_qkv_sp(params, x_sharded, cfg: ArchConfig, ctx: TPCtx):
         x2 = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
         b, s, _ = x2.shape
         xf = x2.reshape(b * s, -1).astype(cd)
-        q = (xf @ wq.astype(cd)).reshape(b, s, -1)
-        k = (xf @ wk.astype(cd)).reshape(b, s, -1)
-        v = (xf @ wv.astype(cd)).reshape(b, s, -1)
+        from repro.kernels import ops as kops
+        # planned blocked GEMMs with the compute-dtype cast fused into the
+        # store phase (fp32 accumulation, no accumulator round trip).
+        # NOTE: concatenating wq/wk/wv here into one GEMM would copy the
+        # whole QKV weight shard every step — a true single-dispatch QKV
+        # GEMM needs param-level packing (see ROADMAP open items).
+        q = kops.matmul(xf, wq, out_dtype=cd).reshape(b, s, -1)
+        k = kops.matmul(xf, wk, out_dtype=cd).reshape(b, s, -1)
+        v = kops.matmul(xf, wv, out_dtype=cd).reshape(b, s, -1)
         k = jax.lax.all_gather(k, "model", axis=2, tiled=True)
         v = jax.lax.all_gather(v, "model", axis=2, tiled=True)
         return q, k, v
@@ -401,6 +407,12 @@ def attention_apply(
             cfg=XYZConfig(y=ctx.model, x_layout="replicated" if cache
                           is not None else "ksharded",
                           out_dtype=cd))
+        return o, new_cache, False
+    if ctx.model == 1:
+        # fused out-projection: planned blocked GEMM, cast in-kernel
+        from repro.kernels import ops as kops
+        o = kops.matmul(out.reshape(b * s, -1), params["wo"],
+                        out_dtype=cd).reshape(b, s, -1)
         return o, new_cache, False
     o = jnp.einsum("bsn,nd->bsd", out, params["wo"].astype(cd))
     return o, new_cache, False

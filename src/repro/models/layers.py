@@ -23,6 +23,7 @@ from repro.core.maxeva_matmul import (
     xyz_weight_shape,
 )
 from repro.core.sharding import dp_axes, model_size
+from repro.kernels.epilogue import Epilogue
 from repro.models.param import ParamDef
 
 
@@ -152,8 +153,9 @@ def xyz_matmul_seq_scatter(x: jnp.ndarray, w_xyz: jnp.ndarray, *,
             from repro.core.maxeva_matmul import _slice_k_block
             x2 = _slice_k_block(x2, md, model, model)
         from repro.kernels import ops as kops
-        partial = kops.matmul(x2, wl, out_dtype=jnp.float32) \
-            .astype(ctx.compute_dtype)  # 16-bit wire + AD buffers
+        # 16-bit wire + AD buffers; the cast is fused into the kernel's
+        # store phase (no fp32 round trip through HBM)
+        partial = kops.matmul(x2, wl, out_dtype=ctx.compute_dtype)
         partial = partial.reshape(b, s, -1)
         return jax.lax.psum_scatter(partial, "model", scatter_dimension=1,
                                     tiled=True)
@@ -181,13 +183,18 @@ def mlp_apply_fused_sp(params: Dict[str, jnp.ndarray], h_sharded: jnp.ndarray,
         b, s, _ = x2.shape
         xf = x2.reshape(b * s, -1)
         from repro.kernels import ops as kops
-        hcol = kops.matmul(xf, wu[0], out_dtype=jnp.float32).astype(cd)
+        # up/gate GEMMs carry their activation + cast in the fused
+        # epilogue: the fp32 accumulator never round-trips through HBM
         if wg is not None:
-            g = kops.matmul(xf, wg[0], out_dtype=jnp.float32)
-            hcol = jax.nn.silu(g).astype(cd) * hcol
+            hcol = kops.matmul(xf, wu[0],
+                               epilogue=Epilogue(out_dtype=cd))
+            g = kops.matmul(xf, wg[0], epilogue=Epilogue(
+                activation="silu", out_dtype=cd))
+            hcol = g * hcol
         else:
-            hcol = jax.nn.gelu(hcol.astype(jnp.float32)).astype(cd)
-        part = kops.matmul(hcol, wd[0], out_dtype=jnp.float32).astype(cd)
+            hcol = kops.matmul(xf, wu[0], epilogue=Epilogue(
+                activation="gelu", out_dtype=cd))
+        part = kops.matmul(hcol, wd[0], out_dtype=cd)
         part = part.reshape(b, s, -1)
         return jax.lax.psum_scatter(part, "model", scatter_dimension=1,
                                     tiled=True)
@@ -266,14 +273,20 @@ def mlp_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
     SP).  Returns activations matching the residual-stream sharding:
     seq-sharded under active SP, replicated otherwise."""
     model = ctx.model
-    up_cfg = XYZConfig(y=ctx.up_y, schedule=ctx.down_schedule,
-                       out_dtype=ctx.compute_dtype)
-    h = xyz_matmul(x, params["up"], mesh=ctx.mesh, cfg=up_cfg)
+    cd = ctx.compute_dtype
+    up_cfg = XYZConfig(y=ctx.up_y, schedule=ctx.down_schedule, out_dtype=cd)
     if gated:
-        g = xyz_matmul(x, params["gate"], mesh=ctx.mesh, cfg=up_cfg)
-        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+        # silu fuses into the gate GEMM's store phase; with up_y == 1 it
+        # runs on the fp32 VMEM accumulator tile inside the kernel
+        h = xyz_matmul(x, params["up"], mesh=ctx.mesh, cfg=up_cfg)
+        gate_cfg = dataclasses.replace(up_cfg, epilogue=Epilogue(
+            activation="silu", out_dtype=cd))
+        g = xyz_matmul(x, params["gate"], mesh=ctx.mesh, cfg=gate_cfg)
+        h = g * h
     else:
-        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+        up_fused = dataclasses.replace(up_cfg, epilogue=Epilogue(
+            activation="gelu", out_dtype=cd))
+        h = xyz_matmul(x, params["up"], mesh=ctx.mesh, cfg=up_fused)
 
     down_y = ctx.down_y or model
     if _sp_active(x, ctx) and down_y == model:

@@ -70,11 +70,14 @@ def vocab_parallel_xent(
             nll, w = jax.checkpoint(per_chunk)(hs, headl, ts, md)
             return (acc[0] + nll, acc[1] + w), None
 
-        (nll, w), _ = jax.lax.scan(step, (0.0, 0.0), jnp.arange(nchunks))
+        # carries are (1,) arrays, not scalars: older shard_map fails to
+        # transpose a scan with scalar carries under grad (_SpecError)
+        zero = jnp.zeros((1,), jnp.float32)
+        (nll, w), _ = jax.lax.scan(step, (zero, zero), jnp.arange(nchunks))
         if rs is not None:
             nll = jax.lax.psum(nll, rs)
             w = jax.lax.psum(w, rs)
-        return nll / jnp.maximum(w, 1.0)
+        return (nll / jnp.maximum(w, 1.0))[0]
 
     from repro.core.sharding import row_axes
     rs = row_axes(ctx.mesh, h.shape[0]) if ctx.mesh.devices.size > 1 \

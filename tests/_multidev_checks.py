@@ -27,6 +27,7 @@ from repro.core.maxeva_matmul import (  # noqa: E402
     xyz_matmul,
     xyz_matmul_replicated_out,
 )
+from repro.core.sharding import use_mesh  # noqa: E402
 
 
 def make_mesh():
@@ -61,7 +62,7 @@ def check_xyz_forward_all_schedules():
                     continue
                 cfg = XYZConfig(y=y, schedule=sched, x_layout=layout)
                 w_xyz = shard_weight_xyz(w, 4, y)
-                with jax.set_mesh(mesh):
+                with use_mesh(mesh):
                     got = xyz_matmul(x, w_xyz, mesh=mesh, cfg=cfg)
                 np.testing.assert_allclose(
                     np.asarray(got), want, rtol=2e-5, atol=2e-5,
@@ -76,11 +77,87 @@ def check_replicated_out():
     for layout in ("replicated", "ksharded"):
         cfg = XYZConfig(y=4, schedule="allreduce", x_layout=layout)
         w_xyz = shard_weight_xyz(w, 4, 4)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             got = xyz_matmul_replicated_out(x, w_xyz, mesh=mesh, cfg=cfg)
         np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5,
                                    atol=2e-5, err_msg=layout)
     print("ok replicated_out")
+
+
+def check_ring_bitwise_matches_reduce_scatter():
+    """The overlapped collective matmul ('ring') must be bitwise identical
+    to 'reduce_scatter' at fp32: both build the partial from the same
+    per-N-chunk GEMMs and reduce in ascending rank order."""
+    mesh = make_mesh()
+    for seed in range(3):
+        x, w = _data(b=4, s=8, k=64, n=128, seed=seed)
+        for y in (2, 4):
+            w_xyz = shard_weight_xyz(w, 4, y)
+            outs = {}
+            for sched in ("reduce_scatter", "ring"):
+                cfg = XYZConfig(y=y, schedule=sched)
+                with use_mesh(mesh):
+                    outs[sched] = np.asarray(
+                        xyz_matmul(x, w_xyz, mesh=mesh, cfg=cfg))
+            np.testing.assert_array_equal(
+                outs["ring"], outs["reduce_scatter"],
+                err_msg=f"y={y} seed={seed}")
+    print("ok ring_bitwise_matches_reduce_scatter")
+
+
+def check_xyz_epilogue():
+    """Fused epilogues through the sharded path match the unfused
+    reference (einsum + bias/act/residual) for every schedule."""
+    from repro.kernels.epilogue import Epilogue
+    mesh = make_mesh()
+    x, w = _data()
+    n = w.shape[1]
+    kb, kr = jax.random.split(jax.random.PRNGKey(7))
+    bias = jax.random.normal(kb, (n,), jnp.float32)
+    res = jax.random.normal(kr, (*x.shape[:-1], n), jnp.float32)
+
+    base = jnp.einsum("bsk,kn->bsn", x, w)
+    for y, sched in [(1, "reduce_scatter"), (2, "ring"),
+                     (4, "reduce_scatter"), (4, "ring"), (2, "allreduce")]:
+        ep = Epilogue(bias=True, activation="gelu", residual=True)
+        want = jax.nn.gelu(base + bias) + res
+        cfg = XYZConfig(y=y, schedule=sched, epilogue=ep)
+        w_xyz = shard_weight_xyz(w, 4, y)
+        with use_mesh(mesh):
+            got = xyz_matmul(x, w_xyz, mesh=mesh, cfg=cfg, bias=bias,
+                             residual=res)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5,
+            err_msg=f"y={y} sched={sched}")
+
+    # fused rowwise int8 quantize: per-N-shard scales, [..., model]
+    epq = Epilogue(activation="silu", quantize=True)
+    cfgq = XYZConfig(y=2, schedule="ring", epilogue=epq)
+    w_xyz = shard_weight_xyz(w, 4, 2)
+    with use_mesh(mesh):
+        q, s = xyz_matmul(x, w_xyz, mesh=mesh, cfg=cfgq)
+    assert q.shape == base.shape and q.dtype == jnp.int8, (q.shape, q.dtype)
+    assert s.shape == (*base.shape[:-1], 4) and s.dtype == jnp.float32
+    act = np.asarray(jax.nn.silu(base))
+    nloc = n // 4
+    for c in range(4):
+        shard = act[..., c * nloc:(c + 1) * nloc]
+        sc = np.asarray(s)[..., c:c + 1]
+        back = np.asarray(q)[..., c * nloc:(c + 1) * nloc] * sc
+        absmax = np.max(np.abs(shard), axis=-1, keepdims=True)
+        assert np.all(np.abs(back - shard) <= absmax / 254 + 1e-5), c
+
+    # replicated-out epilogue (full-row bias, replicated residual)
+    epr = Epilogue(bias=True, activation="relu")
+    cfgr = XYZConfig(y=4, schedule="allreduce", epilogue=epr)
+    w_xyz = shard_weight_xyz(w, 4, 4)
+    with use_mesh(mesh):
+        got = xyz_matmul_replicated_out(x, w_xyz, mesh=mesh, cfg=cfgr,
+                                        bias=bias)
+    want = jax.nn.relu(base + bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    print("ok xyz_epilogue")
 
 
 def check_grads():
@@ -88,7 +165,7 @@ def check_grads():
     x, w = _data(k=16, n=32)
 
     for y, sched in [(1, "allreduce"), (4, "reduce_scatter"), (2, "ring"),
-                     (4, "allreduce")]:
+                     (4, "ring"), (4, "allreduce")]:
         cfg = XYZConfig(y=y, schedule=sched)
         w_xyz = shard_weight_xyz(w, 4, y)
 
@@ -100,7 +177,7 @@ def check_grads():
             return jnp.sum(jnp.sin(jnp.einsum("bsk,kn->bsn", xx,
                                               unshard_weight_xyz(ww, y))))
 
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             gx, gw = jax.grad(loss_sharded, argnums=(0, 1))(x, w_xyz)
         gx_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(x, w_xyz)
         np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_r),
@@ -109,6 +186,34 @@ def check_grads():
         np.testing.assert_allclose(np.asarray(gw), np.asarray(gw_r),
                                    rtol=1e-4, atol=1e-4,
                                    err_msg=f"gw y={y} {sched}")
+
+    # gradients THROUGH the fused epilogue, with the overlapped ring
+    from repro.kernels.epilogue import Epilogue
+    kb = jax.random.PRNGKey(11)
+    bias = jax.random.normal(kb, (w.shape[1],), jnp.float32)
+    for y, sched in [(2, "ring"), (4, "ring"), (4, "reduce_scatter")]:
+        ep = Epilogue(bias=True, activation="gelu")
+        cfg = XYZConfig(y=y, schedule=sched, epilogue=ep)
+        w_xyz = shard_weight_xyz(w, 4, y)
+
+        def loss_fused(xx, ww, bb):
+            out = xyz_matmul(xx, ww, mesh=mesh, cfg=cfg, bias=bb)
+            return jnp.sum(jnp.sin(out))
+
+        def loss_unfused(xx, ww, bb):
+            h = jnp.einsum("bsk,kn->bsn", xx, unshard_weight_xyz(ww, y))
+            return jnp.sum(jnp.sin(jax.nn.gelu(h + bb)))
+
+        with use_mesh(mesh):
+            gx, gw, gb = jax.grad(loss_fused, argnums=(0, 1, 2))(
+                x, w_xyz, bias)
+        gx_r, gw_r, gb_r = jax.grad(loss_unfused, argnums=(0, 1, 2))(
+            x, w_xyz, bias)
+        for got, want, nm in [(gx, gx_r, "gx"), (gw, gw_r, "gw"),
+                              (gb, gb_r, "gb")]:
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4,
+                err_msg=f"epilogue {nm} y={y} {sched}")
     print("ok grads")
 
 
@@ -130,7 +235,7 @@ def check_mlp_composition():
         h = jax.nn.gelu(h)
         return xyz_matmul(h, w2x, mesh=mesh, cfg=down)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         got = mlp(x)
     want = jnp.einsum("bsk,kn->bsn", jax.nn.gelu(jnp.einsum(
         "bsk,kn->bsn", x, w1)), w2)
@@ -154,7 +259,7 @@ def check_collective_bytes_ordering():
         cfg = XYZConfig(y=4, schedule=sched)
         w_xyz = shard_weight_xyz(w, 4, 4)
         f = jax.jit(lambda xx: xyz_matmul(xx, w_xyz, mesh=mesh, cfg=cfg))
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             comp = f.lower(x).compile()
         return collective_wire_bytes(comp.as_text())["total_wire_bytes"]
 

@@ -43,6 +43,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax, jax.numpy as jnp, numpy as np
 from repro.launch.mesh import make_mesh
+from repro.core.sharding import use_mesh
 from repro.optim import AdamWConfig
 from repro.optim.compression import init_error_state, make_dp_train_step
 
@@ -69,7 +70,7 @@ for mode in ("none", "int8_ef"):
     opt = init_opt_state(p, cfg)
     err = init_error_state(p, 8)
     step = make_dp_train_step(loss_fn, cfg, mesh, "data", mode)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         for s in range(150):
             loss, p, opt, err = step(p, opt, err, data(s))
     results[mode] = (float(loss), float(jnp.max(jnp.abs(p["w"] - w_true))))
@@ -89,7 +90,7 @@ for mode in ("none", "int8_ef"):
     err = init_error_state(p, 8)
     step = make_dp_train_step(loss_fn, cfg, mesh, "data", mode)
     b = {"x": jnp.zeros((64, 256)), "y": jnp.zeros((64, 256))}
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         txt = step.lower(p, opt, err, b).compile().as_text()
     an = analyze_hlo(txt)
     outs[mode] = an["total_wire_bytes"]

@@ -1,0 +1,169 @@
+"""Fused-epilogue numerics: the Pallas kernel's store-phase epilogue
+(interpret mode) against the unfused reference sequence, the XLA dispatch
+path, and gradients through `ops.matmul` with an epilogue.
+
+The sharded cases (epilogues through ``xyz_matmul`` incl. the overlapped
+'ring' schedule, and its gradients) live in ``_multidev_checks.py`` /
+``test_maxeva_matmul.py`` because they need an 8-device subprocess.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.epilogue import Epilogue, apply_epilogue
+from repro.kernels.matmul import matmul_pallas
+
+EPILOGUES = [
+    Epilogue(),
+    Epilogue(out_dtype=jnp.bfloat16),
+    Epilogue(bias=True),
+    Epilogue(bias=True, activation="gelu"),
+    Epilogue(activation="silu", residual=True),
+    Epilogue(bias=True, activation="relu", residual=True,
+             out_dtype=jnp.bfloat16),
+    Epilogue(quantize=True),
+    Epilogue(bias=True, activation="gelu", quantize=True),
+]
+_IDS = ["id", "cast", "b", "b+gelu", "silu+r", "b+relu+r+cast", "q", "b+gelu+q"]
+
+
+def _operands(m, k, n, seed=0, dtype=jnp.float32):
+    ka, kb, kc, kd = jax.random.split(jax.random.PRNGKey(seed), 4)
+    a = jax.random.normal(ka, (m, k), dtype)
+    b = jax.random.normal(kb, (k, n), dtype)
+    bias = jax.random.normal(kc, (n,), jnp.float32)
+    res = jax.random.normal(kd, (m, n), jnp.float32)
+    return a, b, bias, res
+
+
+def _check(got, want, ep, exact_q=True):
+    if ep.quantize:
+        gq, gs = got
+        wq, ws = want
+        assert gq.dtype == jnp.int8 and gs.dtype == jnp.float32
+        dq = np.abs(np.asarray(gq, np.int32) - np.asarray(wq, np.int32))
+        # blocked-K accumulation can flip a value across a rounding
+        # boundary by at most one quantization step
+        assert dq.max() <= (0 if exact_q else 1), dq.max()
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                                   rtol=1e-5)
+        return
+    assert got.dtype == want.dtype, (got.dtype, want.dtype)
+    rtol = 1e-5 if got.dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=1e-4)
+
+
+@pytest.mark.parametrize("ep", EPILOGUES, ids=_IDS)
+@pytest.mark.parametrize("mkn", [(32, 32, 32), (100, 130, 70), (1, 64, 256)])
+def test_kernel_epilogue_matches_ref_interpret(mkn, ep):
+    """Pallas store-phase epilogue (interpret) vs the XLA mirror."""
+    m, k, n = mkn
+    a, b, bias, res = _operands(m, k, n)
+    got = matmul_pallas(a, b, block=(32, 32, 32), epilogue=ep,
+                        bias=bias if ep.bias else None,
+                        residual=res if ep.residual else None,
+                        interpret=True)
+    want = ref.matmul_fused_ref(a, b, ep, bias=bias if ep.bias else None,
+                                residual=res if ep.residual else None)
+    _check(got, want, ep, exact_q=(k <= 32))
+
+
+@pytest.mark.parametrize("ep", EPILOGUES, ids=_IDS)
+def test_ops_dispatch_xla_and_interpret_agree(ep):
+    """The two kernel modes implement the same Epilogue semantics."""
+    a, b, bias, res = _operands(48, 64, 40, seed=3)
+    kw = dict(epilogue=ep, bias=bias if ep.bias else None,
+              residual=res if ep.residual else None)
+    x = ops.matmul(a, b, mode="xla", **kw)
+    p = ops.matmul(a, b, block=(16, 16, 16), mode="interpret", **kw)
+    _check(p, x, ep, exact_q=False)
+
+
+def test_fused_equals_unfused_sequence_xla():
+    """Fusion changes op boundaries, not numerics: one fused dispatch ==
+    plain GEMM followed by a separate epilogue op."""
+    a, b, bias, res = _operands(64, 96, 128, seed=5)
+    for ep in EPILOGUES:
+        kwargs = dict(bias=bias if ep.bias else None,
+                      residual=res if ep.residual else None)
+        fused = ops.matmul(a, b, mode="xla", epilogue=ep, **kwargs)
+        acc = ops.matmul(a, b, mode="xla")  # fp32 accumulator to memory
+        unfused = apply_epilogue(acc, ep, **kwargs)
+        if ep.quantize:
+            np.testing.assert_array_equal(np.asarray(fused[0]),
+                                          np.asarray(unfused[0]))
+            np.testing.assert_array_equal(np.asarray(fused[1]),
+                                          np.asarray(unfused[1]))
+        else:
+            np.testing.assert_array_equal(np.asarray(fused),
+                                          np.asarray(unfused))
+
+
+def test_int8_pipeline_epilogue_exact():
+    """int8 x int8 -> int32 accumulate -> fused rowwise requantize is
+    exact in both kernel modes (integer accumulation has no rounding)."""
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.randint(ka, (64, 96), -127, 128, jnp.int32).astype(jnp.int8)
+    b = jax.random.randint(kb, (96, 64), -127, 128, jnp.int32).astype(jnp.int8)
+    ep = Epilogue(quantize=True)
+    qi, si = matmul_pallas(a, b, block=(32, 32, 32), epilogue=ep,
+                           interpret=True)
+    qr, sr = ref.matmul_fused_ref(a, b, ep)
+    np.testing.assert_array_equal(np.asarray(qi), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(si), np.asarray(sr), rtol=1e-6)
+
+
+def test_epilogue_gradients_match_unfused():
+    """d/d{a, b, bias, residual} of the fused path == the unfused
+    composition (XLA mode; the differentiable epilogues)."""
+    a, b, bias, res = _operands(24, 32, 16, seed=7)
+    ep = Epilogue(bias=True, activation="gelu", residual=True)
+
+    def loss_fused(a, b, bias, res):
+        out = ops.matmul(a, b, mode="xla", epilogue=ep, bias=bias,
+                         residual=res)
+        return jnp.sum(jnp.sin(out))
+
+    def loss_unfused(a, b, bias, res):
+        acc = jnp.dot(a, b, preferred_element_type=jnp.float32)
+        return jnp.sum(jnp.sin(jax.nn.gelu(acc + bias) + res))
+
+    gf = jax.grad(loss_fused, argnums=(0, 1, 2, 3))(a, b, bias, res)
+    gu = jax.grad(loss_unfused, argnums=(0, 1, 2, 3))(a, b, bias, res)
+    for got, want in zip(gf, gu):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_default_block_dtype_fallback():
+    """Unlisted dtypes (float16, int32) fall back by itemsize instead of
+    raising KeyError."""
+    assert ops.default_block(256, 256, 256, "float16") == \
+        ops.default_block(256, 256, 256, "bfloat16")
+    assert ops.default_block(256, 256, 256, "int32") == \
+        ops.default_block(256, 256, 256, "float32")
+    assert ops.planner_dtype_key(jnp.float16) == "bf16"
+    assert ops.planner_dtype_key(jnp.int32) == "fp32"
+    assert ops.planner_dtype_key(jnp.uint8) == "int8"
+    assert ops.planner_dtype_key("bf16") == "bf16"
+
+
+def test_planner_epilogue_accounting():
+    """Fused epilogues shrink the planner's modeled HBM bytes, and the
+    savings model is consistent between planner and perf_model."""
+    from repro.core.perf_model import fused_epilogue_savings
+    from repro.core.planner import epilogue_hbm_bytes
+    ep = Epilogue(bias=True, activation="gelu", out_dtype=jnp.bfloat16)
+    m, n = 4096, 14336
+    fused = epilogue_hbm_bytes(m, n, ep, fused=True)
+    unfused = epilogue_hbm_bytes(m, n, ep, fused=False)
+    assert fused < unfused
+    # the unfused path pays the fp32 accumulator round trip
+    assert unfused - fused == 2 * 4 * m * n
+    sav = fused_epilogue_savings(m, n, ep)
+    assert sav["bytes_saved"] == unfused - fused
+    assert sav["seconds_saved"] > 0

@@ -1,10 +1,19 @@
 """Per-kernel validation: sweep shapes/dtypes in interpret mode and
-assert_allclose against the pure-jnp oracles in ``kernels/ref.py``."""
+assert_allclose against the pure-jnp oracles in ``kernels/ref.py``.
+
+The property-based section needs ``hypothesis`` (see requirements-dev.txt)
+and degrades to a fixed-example smoke subset when it is absent.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to the fixed-example smoke subset below
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ref
 from repro.kernels.matmul import matmul_pallas
@@ -98,15 +107,11 @@ def test_quantize_matches_ref(m, n):
 
 
 # ---------------------------------------------------------------------------
-# properties (hypothesis)
+# properties — the checks run either under hypothesis (random sweep) or on
+# the fixed smoke examples below when hypothesis is absent
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=20, deadline=None)
-@given(
-    m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
-    seed=st.integers(0, 2 ** 16),
-)
-def test_matmul_linearity_property(m, k, n, seed):
+def _check_matmul_linearity(m, k, n, seed):
     """(aA) @ B == a (A @ B): the kernel is linear in its inputs."""
     ka, kb = jax.random.split(jax.random.PRNGKey(seed))
     a = jax.random.normal(ka, (m, k), jnp.float32)
@@ -117,10 +122,7 @@ def test_matmul_linearity_property(m, k, n, seed):
                                atol=1e-5)
 
 
-@settings(max_examples=20, deadline=None)
-@given(s=st.integers(1, 6), m=st.integers(1, 48), n=st.integers(1, 48),
-       seed=st.integers(0, 2 ** 16))
-def test_addertree_equals_sequential_adds(s, m, n, seed):
+def _check_addertree_sequential(s, m, n, seed):
     """The tree result equals the paper's sequential Add-kernel chain."""
     p = jax.random.normal(jax.random.PRNGKey(seed), (s, m, n), jnp.float32)
     got = addertree_pallas(p, block=(16, 16), out_dtype=jnp.float32,
@@ -132,10 +134,7 @@ def test_addertree_equals_sequential_adds(s, m, n, seed):
                                atol=1e-5)
 
 
-@settings(max_examples=25, deadline=None)
-@given(m=st.integers(1, 32), n=st.integers(2, 128), seed=st.integers(0, 2 ** 16),
-       scale=st.floats(1e-3, 1e3))
-def test_quantize_roundtrip_error_bound(m, n, seed, scale):
+def _check_quantize_roundtrip(m, n, seed, scale):
     """|x - dequant(quant(x))| <= absmax/254 + eps, per row."""
     x = jax.random.normal(jax.random.PRNGKey(seed), (m, n), jnp.float32) * scale
     q, s = ref.quantize_rowwise_ref(x)
@@ -143,6 +142,46 @@ def test_quantize_roundtrip_error_bound(m, n, seed, scale):
     absmax = np.max(np.abs(np.asarray(x)), axis=1, keepdims=True)
     bound = absmax / 254.0 + 1e-6
     assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound + 1e-5)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+        seed=st.integers(0, 2 ** 16),
+    )
+    def test_matmul_linearity_property(m, k, n, seed):
+        _check_matmul_linearity(m, k, n, seed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(s=st.integers(1, 6), m=st.integers(1, 48), n=st.integers(1, 48),
+           seed=st.integers(0, 2 ** 16))
+    def test_addertree_equals_sequential_adds(s, m, n, seed):
+        _check_addertree_sequential(s, m, n, seed)
+
+    @settings(max_examples=25, deadline=None)
+    @given(m=st.integers(1, 32), n=st.integers(2, 128),
+           seed=st.integers(0, 2 ** 16), scale=st.floats(1e-3, 1e3))
+    def test_quantize_roundtrip_error_bound(m, n, seed, scale):
+        _check_quantize_roundtrip(m, n, seed, scale)
+
+
+@pytest.mark.parametrize("m,k,n,seed", [(1, 1, 1, 0), (8, 16, 4, 1),
+                                        (33, 7, 20, 2), (64, 64, 64, 3)])
+def test_matmul_linearity_smoke(m, k, n, seed):
+    _check_matmul_linearity(m, k, n, seed)
+
+
+@pytest.mark.parametrize("s,m,n,seed", [(1, 1, 1, 0), (3, 17, 9, 1),
+                                        (6, 48, 48, 2)])
+def test_addertree_sequential_smoke(s, m, n, seed):
+    _check_addertree_sequential(s, m, n, seed)
+
+
+@pytest.mark.parametrize("m,n,seed,scale", [(1, 2, 0, 1e-3), (7, 33, 1, 1.0),
+                                            (32, 128, 2, 1e3)])
+def test_quantize_roundtrip_smoke(m, n, seed, scale):
+    _check_quantize_roundtrip(m, n, seed, scale)
 
 
 def test_quantized_matmul_close_to_float():

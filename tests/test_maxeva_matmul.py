@@ -35,6 +35,14 @@ def test_replicated_out():
     _run("replicated_out")
 
 
+def test_ring_bitwise_matches_reduce_scatter():
+    _run("ring_bitwise_matches_reduce_scatter")
+
+
+def test_xyz_epilogue():
+    _run("xyz_epilogue")
+
+
 def test_grads():
     _run("grads")
 

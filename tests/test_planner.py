@@ -1,9 +1,18 @@
 """Planner tests: reproduce the paper's reported solutions exactly, and
-property-test that every emitted plan satisfies its constraints."""
+property-test that every emitted plan satisfies its constraints.
+
+The property-based section needs ``hypothesis`` (see requirements-dev.txt)
+and degrades to a fixed-example smoke subset when it is absent.
+"""
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # degrade to the fixed-example smoke subset below
+    HAVE_HYPOTHESIS = False
 
 from repro.core.device_model import AIE_VC1902, TPU_V5E, AIEDevice, DTYPE_BYTES
 from repro.core.planner import (
@@ -72,16 +81,11 @@ def test_paper_config_resources_match_tables():
 
 
 # ---------------------------------------------------------------------------
-# Constraint-satisfaction properties (hypothesis)
+# Constraint-satisfaction properties — run under hypothesis when present,
+# and on the fixed smoke examples below otherwise
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=30, deadline=None)
-@given(
-    n_cores=st.integers(min_value=16, max_value=800),
-    plio_in=st.integers(min_value=8, max_value=200),
-    plio_out=st.integers(min_value=8, max_value=200),
-)
-def test_xyz_solutions_always_satisfy_constraints(n_cores, plio_in, plio_out):
+def _check_xyz_constraints(n_cores, plio_in, plio_out):
     dev = dataclasses.replace(AIE_VC1902, n_cores=n_cores, plio_in=plio_in,
                               plio_out=plio_out)
     for cfg in solve_aie_array(dev, top=5):
@@ -90,13 +94,7 @@ def test_xyz_solutions_always_satisfy_constraints(n_cores, plio_in, plio_out):
         assert cfg.plio_out <= dev.plio_out
 
 
-@settings(max_examples=30, deadline=None)
-@given(
-    eff_lb=st.sampled_from([0.5, 0.8, 0.9, 0.95]),
-    precision=st.sampled_from(["int8", "fp32"]),
-    mem_kb=st.integers(min_value=4, max_value=64),
-)
-def test_kernel_tiles_always_satisfy_constraints(eff_lb, precision, mem_kb):
+def _check_kernel_tile_constraints(eff_lb, precision, mem_kb):
     dev = dataclasses.replace(AIE_VC1902, usable_buffer_bytes=mem_kb * 1024)
     peak = dev.peak_macs[precision]
     sa = dev.sizeof_in(precision)
@@ -111,6 +109,42 @@ def test_kernel_tiles_always_satisfy_constraints(eff_lb, precision, mem_kb):
         # powers of two
         for d in t.as_tuple():
             assert d & (d - 1) == 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n_cores=st.integers(min_value=16, max_value=800),
+        plio_in=st.integers(min_value=8, max_value=200),
+        plio_out=st.integers(min_value=8, max_value=200),
+    )
+    def test_xyz_solutions_always_satisfy_constraints(n_cores, plio_in,
+                                                      plio_out):
+        _check_xyz_constraints(n_cores, plio_in, plio_out)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        eff_lb=st.sampled_from([0.5, 0.8, 0.9, 0.95]),
+        precision=st.sampled_from(["int8", "fp32"]),
+        mem_kb=st.integers(min_value=4, max_value=64),
+    )
+    def test_kernel_tiles_always_satisfy_constraints(eff_lb, precision,
+                                                     mem_kb):
+        _check_kernel_tile_constraints(eff_lb, precision, mem_kb)
+
+
+@pytest.mark.parametrize("n_cores,plio_in,plio_out",
+                         [(16, 8, 8), (400, 78, 117), (800, 200, 200),
+                          (123, 17, 41)])
+def test_xyz_constraints_smoke(n_cores, plio_in, plio_out):
+    _check_xyz_constraints(n_cores, plio_in, plio_out)
+
+
+@pytest.mark.parametrize("eff_lb", [0.5, 0.95])
+@pytest.mark.parametrize("precision", ["int8", "fp32"])
+@pytest.mark.parametrize("mem_kb", [4, 14, 64])
+def test_kernel_tile_constraints_smoke(eff_lb, precision, mem_kb):
+    _check_kernel_tile_constraints(eff_lb, precision, mem_kb)
 
 
 # ---------------------------------------------------------------------------

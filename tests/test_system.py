@@ -72,6 +72,7 @@ import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding
 from repro.configs import get_config
 from repro.launch.mesh import make_mesh
+from repro.core.sharding import use_mesh
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.models.lm import Model
 from repro.optim import AdamWConfig, abstract_opt_state, opt_state_specs
@@ -90,7 +91,7 @@ for arch in ("internlm2-1.8b", "gemma2-27b"):
     ab = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
           "targets": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
     ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jf = jax.jit(fn, in_shardings=(ns(model.param_specs()),
                      ns(opt_state_specs(model.param_specs(), opt_cfg)),
                      ns(batch_specs(cfg, mesh, "train"))))
