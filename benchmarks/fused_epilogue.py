@@ -35,13 +35,17 @@ SHAPES = [(512, 512, 512), (1024, 1024, 1024), (2048, 2048, 2048),
 
 
 def _time_us_interleaved(fns, args, iters=20, max_rounds=None):
-    """Min-of-N for each fn, rounds interleaved so background load on a
-    shared host hits all candidates equally.  The min is the estimator:
-    on an oversubscribed container the median is contention, not work.
+    """Per-fn (min, samples) over interleaved rounds, every timed region
+    closed by block_until_ready, so background load on a shared host hits
+    all candidates equally.  The min gates fused-vs-unfused comparisons
+    (on an oversubscribed container the upper half of the distribution is
+    contention, not work); callers pool the raw samples across passes and
+    report the median-of-N alongside as the typical-call estimate.
     Sampling is adaptive — it stops early once no candidate's min has
     improved for ``iters`` consecutive rounds."""
     for fn in fns:
         jax.block_until_ready(fn(*args))  # compile + warm
+    samples = [[] for _ in fns]
     best = [float("inf")] * len(fns)
     stale = 0
     for _ in range(max_rounds or 3 * iters):
@@ -50,13 +54,14 @@ def _time_us_interleaved(fns, args, iters=20, max_rounds=None):
             t0 = time.perf_counter()
             jax.block_until_ready(fn(*args))
             dt = (time.perf_counter() - t0) * 1e6
+            samples[i].append(dt)
             if dt < best[i] * 0.999:
                 improved = True
             best[i] = min(best[i], dt)
         stale = 0 if improved else stale + 1
         if stale >= iters:
             break
-    return best
+    return list(zip(best, samples))
 
 
 def fused_vs_unfused_rows(passes=2):
@@ -89,18 +94,24 @@ def fused_vs_unfused_rows(passes=2):
     # several temporally separated passes over all shapes, min across
     # passes: contention bursts on a shared host can outlast one shape's
     # whole measurement window, but rarely recur on the same shape twice
-    best = {}
+    best, pooled = {}, {}
     for _ in range(passes):
         for m, k, n, fused, unfused, args in timed:
             iters = 12 if m * k * n <= 2 ** 30 else 10
-            us_f, us_u = _time_us_interleaved([fused, unfused], args,
-                                              iters=iters)
+            (us_f, s_f), (us_u, s_u) = _time_us_interleaved(
+                [fused, unfused], args, iters=iters)
             bf, bu = best.get((m, k, n), (float("inf"), float("inf")))
             best[(m, k, n)] = (min(bf, us_f), min(bu, us_u))
+            pf, pu = pooled.setdefault((m, k, n), ([], []))
+            pf.extend(s_f)
+            pu.extend(s_u)
 
     out = []
     for m, k, n, *_ in timed:
         us_f, us_u = best[(m, k, n)]
+        # true median-of-N over ALL samples from every pass
+        md_f, md_u = (sorted(s)[len(s) // 2]
+                      for s in pooled[(m, k, n)])
         sav = fused_epilogue_savings(m, n, ep)
         # 2% margin = the noise floor of min-of-N on this shared host;
         # the fused path does strictly less memory work (the modeled
@@ -108,6 +119,7 @@ def fused_vs_unfused_rows(passes=2):
         out.append((
             f"fused_epilogue/{m}x{k}x{n}", us_f,
             f"unfused_us={us_u:.1f};speedup={us_u / max(us_f, 1e-9):.2f}x;"
+            f"median_us={md_f:.1f};median_unfused_us={md_u:.1f};"
             f"model_bytes_saved={int(sav['bytes_saved'])};"
             f"fused_le_unfused={us_f <= us_u * 1.02}"))
     return out

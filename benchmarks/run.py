@@ -1,4 +1,10 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
+#
+# Timing policy (noisy shared host): every timed region is closed by
+# jax.block_until_ready (async dispatch otherwise measures queue depth,
+# not work); per-module estimators are median-of-N samples, except the
+# fused-vs-unfused gate which keeps interleaved min-of-N (and reports the
+# median alongside in the derived column).
 import sys
 
 

@@ -10,14 +10,17 @@ from repro.core.planner import solve_aie_kernel_tiles
 from repro.core import perf_model as pm
 
 
-def _time_us(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+def _time_us(fn, *args, iters=15):
+    """Median-of-N, each sample individually closed by block_until_ready
+    (an unblocked loop measures dispatch-queue depth, and the mean soaks
+    up this host's contention bursts)."""
+    jax.block_until_ready(fn(*args))  # compile + warm
+    samples = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return sorted(samples)[len(samples) // 2]
 
 
 def rows():

@@ -13,13 +13,18 @@ SHAPES = [(512, 512, 512), (1024, 1024, 1024), (2048, 2048, 2048),
           (4096, 512, 4096)]
 
 
-def _time_us(fn, *args, iters=5):
-    jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+def _time_us(fn, *args, iters=9):
+    """Median-of-N with every timed region closed by block_until_ready:
+    async dispatch means an unblocked loop times queue depth, not work,
+    and on this oversubscribed host the mean is dominated by contention
+    bursts — the median is the robust per-call estimate."""
+    jax.block_until_ready(fn(*args))  # compile + warm
+    samples = []
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return sorted(samples)[len(samples) // 2]
 
 
 def rows():

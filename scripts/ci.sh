@@ -9,3 +9,10 @@ python -m pip install -r requirements-dev.txt || \
     echo "WARN: dev extras unavailable; property tests fall back to smoke subsets"
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+# fake-multidevice job: the sharded paths (xyz schedules, ring collective,
+# fused-SP packed QKV, epilogues, grads) must pass on every PR.  Runs in
+# its own process so the test suite above keeps a single jax device.
+JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python tests/_multidev_checks.py

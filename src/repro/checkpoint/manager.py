@@ -106,11 +106,18 @@ class CheckpointManager:
 
     def restore(self, step: Optional[int], like: Any,
                 mesh: Optional[Mesh] = None,
-                specs: Optional[Any] = None) -> Tuple[int, Any]:
+                specs: Optional[Any] = None,
+                defs: Optional[Any] = None) -> Tuple[int, Any]:
         """Restore onto the CURRENT mesh/partitioning (elastic).
 
         ``like`` provides the tree structure; ``specs`` (PartitionSpec tree)
         + ``mesh`` re-place each leaf.  Returns (step, tree).
+
+        ``defs`` (the model's ParamDef tree) additionally enables legacy
+        migration: a checkpoint written with packed params stored as their
+        separate views (e.g. wq/wk/wv instead of wqkv) is detected by its
+        leaf count and packed in place, so pre-packing checkpoints restore
+        transparently onto the packed schema.
         """
         if step is None:
             step = self.latest_step()
@@ -118,25 +125,82 @@ class CheckpointManager:
         d = os.path.join(self.dir, f"step_{step:08d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        from jax.sharding import PartitionSpec
         leaves_like, treedef = _flatten(like)
-        spec_leaves = (jax.tree.leaves(
-            specs,
-            is_leaf=lambda s: s is None or isinstance(s, PartitionSpec))
-            if specs is not None else [None] * len(leaves_like))
+        if len(manifest["leaves"]) != len(leaves_like):
+            assert defs is not None, (
+                f"checkpoint at step {step} has "
+                f"{len(manifest['leaves'])} leaves but the target tree "
+                f"has {len(leaves_like)} — if this is a pre-packing "
+                "(separate wq/wk/wv) checkpoint, pass defs=<ParamDef "
+                "tree> to migrate it (Trainer/ServeEngine do this for "
+                "fp32 optimizer state; packed_qkv=False on the config "
+                "is the schema escape hatch)")
+            return step, self._restore_legacy(d, manifest, like, mesh,
+                                              specs, defs)
+        spec_leaves = self._spec_leaves(specs, len(leaves_like))
         assert len(manifest["leaves"]) == len(leaves_like) == \
             len(spec_leaves), (len(manifest["leaves"]), len(leaves_like),
                                len(spec_leaves))
         out = []
         for meta, like_leaf, spec in zip(manifest["leaves"], leaves_like,
                                          spec_leaves):
-            arr = np.load(os.path.join(d, meta["file"]))
-            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
-            if crc != meta["crc32"]:
-                raise IOError(f"checkpoint corruption in {meta['file']}")
-            if mesh is not None and spec is not None \
-                    and mesh.devices.size > 1:
-                out.append(jax.device_put(arr, NamedSharding(mesh, spec)))
-            else:
-                out.append(jax.numpy.asarray(arr))
+            arr = self._load_leaf(d, meta)
+            out.append(self._place(arr, mesh, spec))
         return step, jax.tree.unflatten(treedef, out)
+
+    # -- legacy (unpacked-view) migration --------------------------------------
+
+    def _restore_legacy(self, d: str, manifest, like: Any,
+                        mesh: Optional[Mesh], specs: Optional[Any],
+                        defs: Any):
+        """Load a checkpoint whose packed params are stored as separate
+        view leaves (the pre-``wqkv`` layout) and pack them in place."""
+        from repro.models import param as pm
+        legacy_like = pm.unpack_like(defs)
+        legacy_leaves, legacy_def = _flatten(legacy_like)
+        assert len(manifest["leaves"]) == len(legacy_leaves), (
+            "checkpoint matches neither the packed nor the legacy schema",
+            len(manifest["leaves"]), len(legacy_leaves))
+        for meta, leaf in zip(manifest["leaves"], legacy_leaves):
+            if isinstance(leaf, pm._PassThrough):
+                continue  # non-ParamDef entry (e.g. optimizer step)
+            assert tuple(meta["shape"]) == tuple(leaf.shape), (
+                "legacy leaf shape mismatch (flatten-order drift?)",
+                meta["file"], meta["shape"], leaf.shape)
+        host = [self._load_leaf(d, meta) for meta in manifest["leaves"]]
+        packed = pm.pack_tree(defs, jax.tree.unflatten(legacy_def, host))
+        leaves, treedef = _flatten(packed)
+        assert treedef == _flatten(like)[1], "migrated tree shape mismatch"
+        spec_leaves = self._spec_leaves(specs, len(leaves))
+        assert len(spec_leaves) == len(leaves), (len(spec_leaves),
+                                                 len(leaves))
+        out = [self._place(np.asarray(leaf), mesh, spec)
+               for leaf, spec in zip(leaves, spec_leaves)]
+        return jax.tree.unflatten(treedef, out)
+
+    def export_legacy(self, step: int, tree: Any, defs: Any,
+                      blocking: bool = True) -> None:
+        """Reverse migration: save with every packed param split into its
+        legacy view leaves (wqkv -> wq/wk/wv), for pre-packing tooling."""
+        from repro.models import param as pm
+        self.save(step, pm.split_tree(defs, tree), blocking=blocking)
+
+    def _spec_leaves(self, specs: Optional[Any], n: int) -> List[Any]:
+        from jax.sharding import PartitionSpec
+        if specs is None:
+            return [None] * n
+        return jax.tree.leaves(
+            specs,
+            is_leaf=lambda s: s is None or isinstance(s, PartitionSpec))
+
+    def _load_leaf(self, d: str, meta) -> np.ndarray:
+        arr = np.load(os.path.join(d, meta["file"]))
+        crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+        if crc != meta["crc32"]:
+            raise IOError(f"checkpoint corruption in {meta['file']}")
+        return arr
+
+    def _place(self, arr, mesh: Optional[Mesh], spec):
+        if mesh is not None and spec is not None and mesh.devices.size > 1:
+            return jax.device_put(arr, NamedSharding(mesh, spec))
+        return jax.numpy.asarray(arr)

@@ -53,6 +53,11 @@ class ArchConfig:
     norm_eps: float = 1e-6
     tie_embeddings: bool = True
 
+    # self-attention QKV as one packed column-sharded `wqkv` parameter
+    # (single GEMM dispatch per apply, zero apply-time weight copies);
+    # False falls back to the legacy separate wq/wk/wv schema
+    packed_qkv: bool = True
+
     # dtype / memory policy
     param_dtype: str = "float32"
     compute_dtype: str = "bfloat16"

@@ -18,11 +18,17 @@ _ACCUM = {
 
 def accum_dtype(dtype) -> jnp.dtype:
     """32-bit accumulator for a given input dtype; unlisted dtypes fall
-    back by kind (ints -> int32, floats -> fp32) instead of KeyError."""
+    back by kind (ints -> int32, floats -> fp32) — EXCEPT inputs already
+    wider than 32 bits, which keep their width (an f64 reference run must
+    not silently accumulate at fp32)."""
     dt = jnp.dtype(dtype)
     if dt in _ACCUM:
         return _ACCUM[dt]
-    return jnp.int32 if dt.kind in ("i", "u") else jnp.float32
+    if dt.kind in ("i", "u"):
+        return jnp.int32 if dt.itemsize <= 4 else jnp.int64
+    if dt.kind == "f" and dt.itemsize >= 8:
+        return jnp.float64
+    return jnp.float32
 
 
 def matmul_ref(a: jnp.ndarray, b: jnp.ndarray,

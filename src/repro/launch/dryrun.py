@@ -18,7 +18,7 @@ from repro.configs import ARCH_IDS, SHAPES, get_config, runnable_cells  # noqa: 
 from repro.core.sharding import use_mesh  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.roofline import collective_wire_bytes, roofline_terms  # noqa: E402
-from repro.launch.specs import input_specs  # noqa: E402
+from repro.launch.specs import input_specs, param_io_specs  # noqa: E402
 from repro.models.lm import Model  # noqa: E402
 from repro.optim import AdamWConfig, abstract_opt_state, opt_state_specs  # noqa: E402
 from repro.train.step import batch_specs, make_train_step  # noqa: E402
@@ -83,32 +83,29 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
     opt_cfg = AdamWConfig(state_mode=cfg.opt_state_mode)
 
     with use_mesh(mesh):
+        aparams, pspecs = param_io_specs(model)
         if cell.kind == "train":
             fn = make_train_step(model, opt_cfg)
-            aparams = model.abstract_params()
             aopt = abstract_opt_state(aparams, opt_cfg)
             abatch = input_specs(cfg, shape)
-            in_sh = (_ns(mesh, model.param_specs()),
-                     _ns(mesh, opt_state_specs(model.param_specs(),
-                                               opt_cfg)),
+            in_sh = (_ns(mesh, pspecs),
+                     _ns(mesh, opt_state_specs(pspecs, opt_cfg)),
                      _ns(mesh, batch_specs(cfg, mesh, "train")))
             jf = jax.jit(fn, in_shardings=in_sh, donate_argnums=(0, 1))
             lowered = jf.lower(aparams, aopt, abatch)
         elif cell.kind == "prefill":
-            aparams = model.abstract_params()
             abatch = input_specs(cfg, shape)
-            in_sh = (_ns(mesh, model.param_specs()),
+            in_sh = (_ns(mesh, pspecs),
                      _ns(mesh, batch_specs(cfg, mesh, "prefill")))
             jf = jax.jit(model.prefill, in_shardings=in_sh)
             lowered = jf.lower(aparams, abatch)
         else:  # decode
-            aparams = model.abstract_params()
             acache, atok, apos = input_specs(cfg, shape, model)
             from repro.core.sharding import dp_axes, dp_size
             b = cell.global_batch
             tok_spec = P(dp_axes(mesh), None) \
                 if b % max(dp_size(mesh), 1) == 0 and b > 1 else P(None, None)
-            in_sh = (_ns(mesh, model.param_specs()),
+            in_sh = (_ns(mesh, pspecs),
                      _ns(mesh, model.cache_specs(b, cell.seq_len)),
                      NamedSharding(mesh, tok_spec), None)
             jf = jax.jit(model.decode_step, in_shardings=in_sh,

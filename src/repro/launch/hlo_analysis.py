@@ -144,6 +144,52 @@ def _trip_count(cond_instrs: List[Instr]) -> int:
     return best
 
 
+def _result_dims(shape: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.match(shape)
+    if not m:
+        return None
+    return [int(x) for x in m.group(2).split(",")] if m.group(2) else []
+
+
+def _iter_instrs(text: str):
+    comps = _parse_computations(text)
+    for cname, instrs in comps.items():
+        if cname == "__entry__":  # alias of the entry computation
+            continue
+        for ins in instrs:
+            yield ins
+
+
+def weight_concat_count(text: str, d_model: int) -> int:
+    """Count ``concatenate`` instructions that produce a weight-shaped
+    result — trailing dims (d_model, n) — anywhere in the module.  This is
+    the HLO signature of an apply-time wq/wk/wv concat: the packed-QKV
+    path must report ZERO (the packed parameter is GEMM'd as stored, no
+    per-step weight-shard copy)."""
+    count = 0
+    for ins in _iter_instrs(text):
+        if ins.op != "concatenate":
+            continue
+        dims = _result_dims(ins.shape)
+        if dims and len(dims) >= 2 and dims[-2] == d_model:
+            count += 1
+    return count
+
+
+def gemm_dispatches(text: str, out_cols: int) -> int:
+    """Count ``dot`` instructions whose result's last dim is ``out_cols``.
+    With packed QKV, ``gemm_dispatches(hlo, q_dim + 2*kv_dim)`` == number
+    of attention applies traced (one QKV GEMM dispatch each)."""
+    count = 0
+    for ins in _iter_instrs(text):
+        if ins.op != "dot":
+            continue
+        dims = _result_dims(ins.shape)
+        if dims and dims[-1] == out_cols:
+            count += 1
+    return count
+
+
 def analyze_hlo(text: str) -> Dict[str, float]:
     comps = _parse_computations(text)
     table: Dict[str, Dict[str, str]] = {

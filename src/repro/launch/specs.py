@@ -13,6 +13,14 @@ import jax.numpy as jnp
 from repro.configs.base import SHAPES, ArchConfig, ShapeCell
 
 
+def param_io_specs(model) -> Tuple[Any, Any]:
+    """(abstract ShapeDtypeStruct tree, PartitionSpec tree) for the model
+    parameters — the one source the dry-run, serving restore, and
+    checkpoint migration consume, so every surface sees the packed
+    ``wqkv`` shapes (and any future packed defs) consistently."""
+    return model.abstract_params(), model.param_specs()
+
+
 def train_batch_specs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
     b = cell.global_batch
     s_text = cell.seq_len - (cfg.prefix_tokens or 0)

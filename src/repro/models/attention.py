@@ -21,6 +21,7 @@ else the head_dim (always divisible: 16 | hd for every assigned arch).
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -30,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.core.sharding import constrain
 from repro.models.layers import TPCtx, rope
-from repro.models.param import ParamDef
+from repro.models.param import ParamDef, split_packed_columns
 
 _NEG = -1e30
 
@@ -42,16 +43,46 @@ def use_xyz_attn_out(cfg: ArchConfig, model: int) -> bool:
             and cfg.q_dim % model == 0)
 
 
+def qkv_packing(cfg: ArchConfig) -> int:
+    """MESH-INDEPENDENT shard-interleave factor of the packed wqkv column
+    axis: gcd(q_dim, kv_dim).  The packed columns are laid out in G
+    groups, each [wq_g | wk_g | wv_g].  Any model-parallel degree m the
+    fused path can use divides both view sizes, hence divides G, so every
+    m-shard's local columns are whole groups in order and split locally
+    with cheap slices (``split_packed_columns`` with interleave G/m).
+    Because the layout never depends on the mesh, packed checkpoints
+    restore elastically across different model sizes."""
+    return math.gcd(cfg.q_dim, cfg.kv_dim)
+
+
+def qkv_sizes(cfg: ArchConfig) -> Tuple[int, int, int]:
+    return (cfg.q_dim, cfg.kv_dim, cfg.kv_dim)
+
+
 def attn_defs(cfg: ArchConfig, model: int, dtype: str,
-              fsdp: bool) -> Dict[str, ParamDef]:
+              fsdp: bool, packed: bool = True) -> Dict[str, ParamDef]:
     d = cfg.d_model
     col = P("data", "model") if fsdp else P(None, "model")
     row = P("model", "data") if fsdp else P("model", None)
-    defs = {
-        "wq": ParamDef((d, cfg.q_dim), col, dtype=dtype),
-        "wk": ParamDef((d, cfg.kv_dim), col, dtype=dtype),
-        "wv": ParamDef((d, cfg.kv_dim), col, dtype=dtype),
-    }
+    if packed:
+        # ONE column-sharded (d, q_dim + 2*kv_dim) array; apply time pays
+        # a single GEMM dispatch and zero weight copies.  Checkpoints and
+        # reference math see the logical wq/wk/wv through the split views.
+        defs = {
+            "wqkv": ParamDef(
+                (d, cfg.q_dim + 2 * cfg.kv_dim), col, dtype=dtype,
+                views=(("wq", cfg.q_dim), ("wk", cfg.kv_dim),
+                       ("wv", cfg.kv_dim)),
+                packing=qkv_packing(cfg)),
+        }
+    else:
+        # unpacked: cross-attention applies wq and wk/wv to DIFFERENT
+        # inputs, so packing would force a per-step weight slice there
+        defs = {
+            "wq": ParamDef((d, cfg.q_dim), col, dtype=dtype),
+            "wk": ParamDef((d, cfg.kv_dim), col, dtype=dtype),
+            "wv": ParamDef((d, cfg.kv_dim), col, dtype=dtype),
+        }
     if use_xyz_attn_out(cfg, model):
         from repro.core.maxeva_matmul import xyz_weight_shape
         defs["wo"] = ParamDef(
@@ -86,27 +117,46 @@ def _constrain_qkv(q, k, v, cfg: ArchConfig, ctx: TPCtx):
 
 
 def fused_qkv_sp(params, x_sharded, cfg: ArchConfig, ctx: TPCtx):
-    """QKV projections in ONE shard_map over seq-sharded input: the
+    """QKV projection in ONE shard_map over seq-sharded input: the
     sequence all-gather (broadcast) happens inside, so its backward is the
     AG transpose (reduce-scatter) instead of one all-reduce of [B,S,D] per
     projection (§Perf iteration 3).  q comes out head-sharded; k/v are
-    re-gathered to full (they are g-times smaller)."""
+    re-gathered to full (they are g-times smaller).
+
+    With a packed ``wqkv`` (packing == model) every model shard's local
+    columns are [wq_i | wk_i | wv_i], so the body issues ONE planned
+    blocked GEMM per step with zero weight copies and splits the
+    activation output by cheap contiguous slices."""
     from repro.core.maxeva_matmul import _shard_map
     from repro.models.layers import _row_spec
     mesh = ctx.mesh
     rs = _row_spec(x_sharded, ctx)
     cd = ctx.compute_dtype
+    packed = "wqkv" in params
+    qloc = cfg.q_dim // ctx.model
+    kvloc = cfg.kv_dim // ctx.model
+    # local interleave: each model shard holds G/m whole [q|k|v] groups
+    g_local = qkv_packing(cfg) // ctx.model if packed else 1
 
-    def body(xl, wq, wk, wv):
+    def body_packed(xl, wl):
         x2 = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
         b, s, _ = x2.shape
         xf = x2.reshape(b * s, -1).astype(cd)
         from repro.kernels import ops as kops
-        # planned blocked GEMMs with the compute-dtype cast fused into the
-        # store phase (fp32 accumulation, no accumulator round trip).
-        # NOTE: concatenating wq/wk/wv here into one GEMM would copy the
-        # whole QKV weight shard every step — a true single-dispatch QKV
-        # GEMM needs param-level packing (see ROADMAP open items).
+        # single-dispatch QKV: one planned blocked GEMM with the
+        # compute-dtype cast fused into the store phase (fp32
+        # accumulation, no accumulator round trip)
+        y = kops.matmul(xf, wl, out_dtype=cd).reshape(b, s, -1)
+        q, k, v = split_packed_columns(y, (qloc, kvloc, kvloc), g_local)
+        k = jax.lax.all_gather(k, "model", axis=2, tiled=True)
+        v = jax.lax.all_gather(v, "model", axis=2, tiled=True)
+        return q, k, v
+
+    def body_legacy(xl, wq, wk, wv):
+        x2 = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
+        b, s, _ = x2.shape
+        xf = x2.reshape(b * s, -1).astype(cd)
+        from repro.kernels import ops as kops
         q = kops.matmul(xf, wq, out_dtype=cd).reshape(b, s, -1)
         k = kops.matmul(xf, wk, out_dtype=cd).reshape(b, s, -1)
         v = kops.matmul(xf, wv, out_dtype=cd).reshape(b, s, -1)
@@ -114,13 +164,49 @@ def fused_qkv_sp(params, x_sharded, cfg: ArchConfig, ctx: TPCtx):
         v = jax.lax.all_gather(v, "model", axis=2, tiled=True)
         return q, k, v
 
-    q, k, v = _shard_map(
-        body, mesh,
-        (P(rs, "model", None), P(None, "model"), P(None, "model"),
-         P(None, "model")),
-        (P(rs, None, "model"), P(rs, None, None), P(rs, None, None)),
-    )(x_sharded, params["wq"], params["wk"], params["wv"])
+    out_specs = (P(rs, None, "model"), P(rs, None, None), P(rs, None, None))
+    if packed:
+        q, k, v = _shard_map(
+            body_packed, mesh, (P(rs, "model", None), P(None, "model")),
+            out_specs)(x_sharded, params["wqkv"])
+    else:
+        q, k, v = _shard_map(
+            body_legacy, mesh,
+            (P(rs, "model", None), P(None, "model"), P(None, "model"),
+             P(None, "model")),
+            out_specs)(x_sharded, params["wq"], params["wk"], params["wv"])
     b, s = q.shape[0], q.shape[1]
+    return (q.reshape(b, s, cfg.n_heads, cfg.hd),
+            k.reshape(b, s, cfg.n_kv_heads, cfg.hd),
+            v.reshape(b, s, cfg.n_kv_heads, cfg.hd))
+
+
+def project_qkv(params, x, cfg: ArchConfig, ctx: TPCtx):
+    """Replicated-input QKV projection (train/prefill fallback and decode):
+    one GEMM dispatch against the packed ``wqkv`` — the SAME computation in
+    every mode, which is what makes prefill and decode round identically —
+    with the split paid on the activation output, never the weights.
+    Legacy unpacked params fall back to three GEMMs.
+
+    Returns head-expanded (q [B,S,H,hd], k [B,S,KV,hd], v [B,S,KV,hd]),
+    un-roped."""
+    b, s, _ = x.shape
+    cd = ctx.compute_dtype
+    if "wqkv" not in params:
+        q = jnp.einsum("bsd,dn->bsn", x, params["wq"].astype(cd))
+        k = jnp.einsum("bsd,dn->bsn", x, params["wk"].astype(cd))
+        v = jnp.einsum("bsd,dn->bsn", x, params["wv"].astype(cd))
+    else:
+        w = params["wqkv"].astype(cd)
+        if ctx.model == 1:
+            # planned blocked GEMM, cast fused into the store phase
+            from repro.kernels import ops as kops
+            y = kops.matmul(x.reshape(b * s, -1), w,
+                            out_dtype=cd).reshape(b, s, -1)
+        else:
+            y = jnp.einsum("bsd,dn->bsn", x, w)
+        q, k, v = split_packed_columns(y, qkv_sizes(cfg),
+                                       qkv_packing(cfg))
     return (q.reshape(b, s, cfg.n_heads, cfg.hd),
             k.reshape(b, s, cfg.n_kv_heads, cfg.hd),
             v.reshape(b, s, cfg.n_kv_heads, cfg.hd))
@@ -331,6 +417,7 @@ def attention_apply(
     kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
     use_rope: bool = True,
     x_seq_sharded: bool = False,
+    return_kv: bool = False,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]], bool]:
     """Returns (attn_out, new_cache, out_is_seq_sharded).
 
@@ -339,34 +426,36 @@ def attention_apply(
     ``kv_override`` supplies external K/V activations (cross-attention).
     ``x_seq_sharded``: x is the SP-sharded residual; the QKV fused path
     performs the gather internally.
+    ``return_kv`` (cache None only): return the projected post-rope K/V as
+    ``{"k": .., "v": ..}`` in the cache slot so prefill can build the
+    decode cache without re-projecting.
     """
     b, s, _ = x.shape
     n_kv, g, hd = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.hd
     cd = ctx.compute_dtype
 
-    if x_seq_sharded and kv_override is None:
-        q, k, v = fused_qkv_sp(params, x, cfg, ctx)
+    if kv_override is not None:
+        # cross-attention: wq applies to x, K/V come from the encoder —
+        # always the unpacked schema (see attn_defs)
+        q = jnp.einsum("bsd,dn->bsn", x, params["wq"].astype(cd))
+        q = q.reshape(b, s, cfg.n_heads, hd)
+        k, v = kv_override
+        if use_rope:
+            q = rope(q, positions, theta)
+    else:
+        if x_seq_sharded:
+            q, k, v = fused_qkv_sp(params, x, cfg, ctx)
+        else:
+            q, k, v = project_qkv(params, x, cfg, ctx)
         if use_rope:
             q = rope(q, positions, theta)
             k = rope(k, positions, theta)
-    else:
-        q = jnp.einsum("bsd,dn->bsn", x, params["wq"].astype(cd))
-        q = q.reshape(b, s, cfg.n_heads, hd)
-        if kv_override is None:
-            kx = jnp.einsum("bsd,dn->bsn", x, params["wk"].astype(cd))
-            vx = jnp.einsum("bsd,dn->bsn", x, params["wv"].astype(cd))
-            k = kx.reshape(b, s, n_kv, hd)
-            v = vx.reshape(b, s, n_kv, hd)
-            if use_rope:
-                q = rope(q, positions, theta)
-                k = rope(k, positions, theta)
-        else:
-            k, v = kv_override
-            if use_rope:
-                q = rope(q, positions, theta)
 
     new_cache = None
     if cache is None:
+        if return_kv:
+            assert kv_override is None
+            new_cache = {"k": k, "v": v}
         # head-expand GQA K/V once, OUTSIDE the flash loops, so the blocks
         # are fully head-parallel (paper Z-sharding, zero inner collectives)
         ke = jnp.repeat(k, g, axis=2) if g > 1 else k

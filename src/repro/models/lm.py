@@ -58,11 +58,11 @@ _ATTN_KINDS = ("global", "local", "chunked")
 
 
 def _stack_defs(defs: Any, n: int) -> Any:
-    """Prepend a group axis to every ParamDef in a tree."""
+    """Prepend a group axis to every ParamDef in a tree (packed views ride
+    along: the view axis stays last)."""
     def add(d: ParamDef, _path: str):
         spec = P(*([None] + list(d.spec)))
-        return ParamDef((n, *d.shape), spec, d.init, d.scale, d.dtype,
-                        d.custom)
+        return dataclasses.replace(d, shape=(n, *d.shape), spec=spec)
     return pm._walk(defs, add)
 
 
@@ -87,7 +87,8 @@ class Model:
         d = {"ln1": ParamDef((cfg.d_model,), P(), init="zeros",
                              dtype="float32")}
         if btype in _ATTN_KINDS:
-            d["attn"] = attn_defs(cfg, model, dt, fsdp)
+            d["attn"] = attn_defs(cfg, model, dt, fsdp,
+                                  packed=cfg.packed_qkv)
         elif btype == "rglru":
             d["mix"] = rglru_defs(cfg, model, dt, fsdp)
         elif btype == "mlstm":
@@ -99,7 +100,10 @@ class Model:
         if self.cfg.encdec:
             d["lnx"] = ParamDef((cfg.d_model,), P(), init="zeros",
                                 dtype="float32")
-            d["xattn"] = attn_defs(cfg, model, dt, fsdp)
+            # cross-attention stays unpacked: wq consumes the decoder
+            # stream, wk/wv the encoder output — packing would force a
+            # per-step weight slice (the copy this schema exists to kill)
+            d["xattn"] = attn_defs(cfg, model, dt, fsdp, packed=False)
         if cfg.d_ff > 0:
             d["ln2"] = ParamDef((cfg.d_model,), P(), init="zeros",
                                 dtype="float32")
@@ -135,7 +139,8 @@ class Model:
                 "ln1": ParamDef((cfg.d_model,), P(), init="zeros",
                                 dtype="float32"),
                 "attn": attn_defs(cfg, model_size(self.mesh),
-                                  cfg.param_dtype, cfg.fsdp_params),
+                                  cfg.param_dtype, cfg.fsdp_params,
+                                  packed=cfg.packed_qkv),
                 "ln2": ParamDef((cfg.d_model,), P(), init="zeros",
                                 dtype="float32"),
                 "ffn": mlp_defs(cfg.d_model, cfg.d_ff,
@@ -249,22 +254,16 @@ class Model:
     def _prefill_attention(self, ap, x, btype, positions, prefix_len,
                            empty_cache, q_chunk, x_seq_sharded=False):
         """Full-sequence flash attention + build the decode cache from the
-        computed K/V."""
+        SAME projected K/V the flash path consumed (return_kv: the packed
+        QKV GEMM runs once, and the cache rounds exactly like decode)."""
         cfg, ctx = self.cfg, self.ctx
-        out, _, pre_scattered = attention_apply(
+        out, kv, pre_scattered = attention_apply(
             ap, x, cfg, ctx, kind=btype, theta=self._theta(btype),
             positions=positions, prefix_len=prefix_len, q_chunk=q_chunk,
-            use_rope=not cfg.encdec, x_seq_sharded=x_seq_sharded)
-        # recompute k/v once more for the cache (cheap GEMMs)
-        cd = ctx.compute_dtype
-        b, s, _ = x.shape
-        k = jnp.einsum("bsd,dn->bsn", x, ap["wk"].astype(cd)).reshape(
-            b, s, cfg.n_kv_heads, cfg.hd)
-        v = jnp.einsum("bsd,dn->bsn", x, ap["wv"].astype(cd)).reshape(
-            b, s, cfg.n_kv_heads, cfg.hd)
-        if not cfg.encdec:
-            from repro.models.layers import rope
-            k = rope(k, positions, self._theta(btype))
+            use_rope=not cfg.encdec, x_seq_sharded=x_seq_sharded,
+            return_kv=True)
+        k, v = kv["k"], kv["v"]  # [B, S, KV, hd], post-rope
+        b, s = k.shape[0], k.shape[1]
         kc, vc = empty_cache["k"], empty_cache["v"]
         w = kc.shape[1]
         if btype == "global":

@@ -96,7 +96,9 @@ def vocab_parallel_logits(h: jnp.ndarray, head: jnp.ndarray, ctx: TPCtx,
                           ) -> jnp.ndarray:
     """[B, S, D] -> [B, S, Vp] (vocab-sharded over model). Serving path."""
     if ctx.mesh.devices.size == 1:
-        logits = jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32), head)
+        # promote (not hard-cast): an f64 reference run keeps f64 here
+        lt = jnp.promote_types(h.dtype, jnp.float32)
+        logits = jnp.einsum("bsd,vd->bsv", h.astype(lt), head)
         if final_softcap:
             logits = final_softcap * jnp.tanh(logits / final_softcap)
         return logits

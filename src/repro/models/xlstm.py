@@ -140,11 +140,15 @@ def mlstm_apply(params, x, cfg: ArchConfig, ctx: TPCtx,
         .reshape(b, s, nh, hd)
     v = jnp.einsum("bsw,wv->bsv", xc, params["wv"].astype(cd)) \
         .reshape(b, s, nh, hd)
-    logi = jnp.einsum("bsw,wh->bsh", xc.astype(f32), params["w_i"]) \
-        + params["b_i"]
+    # the recurrence runs at f32 regardless of param/compute dtype (the
+    # scan carry is f32; f64 reference runs must not widen it)
+    logi = (jnp.einsum("bsw,wh->bsh", xc.astype(f32),
+                       params["w_i"].astype(f32))
+            + params["b_i"].astype(f32))
     logf = jax.nn.log_sigmoid(
-        jnp.einsum("bsw,wh->bsh", xc.astype(f32), params["w_f"])
-        + params["b_f"])
+        jnp.einsum("bsw,wh->bsh", xc.astype(f32),
+                   params["w_f"].astype(f32))
+        + params["b_f"].astype(f32))
 
     if cache is None:
         chunk = min(chunk, s)
@@ -232,8 +236,8 @@ def _slstm_step(params, carry, xz):
     w = c.shape[-1]
     nh = params["r"].shape[1]
     hh = h.reshape(h.shape[0], nh, -1)
-    rec = jnp.einsum("bhx,khxy->kbhy", hh, params["r"]).reshape(
-        4, h.shape[0], w)
+    rec = jnp.einsum("bhx,khxy->kbhy", hh,
+                     params["r"].astype(f32)).reshape(4, h.shape[0], w)
     z = jnp.tanh(xz[:, :w] + rec[0])
     logi = xz[:, w:2 * w] + rec[1]
     logf = jax.nn.log_sigmoid(xz[:, 2 * w:3 * w] + rec[2])
@@ -255,7 +259,8 @@ def slstm_apply(params, x, cfg: ArchConfig, ctx: TPCtx,
     w = d
     f32 = jnp.float32
     xz = (jnp.einsum("bsd,dk->bsk", x.astype(f32),
-                     params["w_in"].astype(f32)) + params["bias"])
+                     params["w_in"].astype(f32))
+          + params["bias"].astype(f32))
 
     if cache is None:
         init = tuple(jnp.zeros((b, w), f32) for _ in range(4))

@@ -35,6 +35,21 @@ class ServeEngine:
             static_argnums=(2,))
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
+    @classmethod
+    def from_checkpoint(cls, model: Model, ckpt_dir: str,
+                        step: Optional[int] = None,
+                        scfg: ServeConfig = ServeConfig()) -> "ServeEngine":
+        """Restore params onto the model's mesh and serve them.  Legacy
+        checkpoints with unpacked wq/wk/wv leaves are packed into the
+        ``wqkv`` schema in place (CheckpointManager migration)."""
+        from repro.checkpoint import CheckpointManager
+        from repro.launch.specs import param_io_specs
+        mgr = CheckpointManager(ckpt_dir)
+        abstract, specs = param_io_specs(model)
+        _, params = mgr.restore(step, abstract, mesh=model.mesh,
+                                specs=specs, defs=model.param_defs())
+        return cls(model, params, scfg)
+
     def _pick(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         v = self.model.cfg.vocab
         logits = logits[:, :v]

@@ -91,15 +91,25 @@ class Trainer:
         return params, opt
 
     def restore(self):
-        """Elastic restore onto the model's (possibly new) mesh."""
+        """Elastic restore onto the model's (possibly new) mesh.  For
+        fp32 optimizer state this also migrates pre-packing checkpoints
+        (separate wq/wk/wv leaves) onto the packed schema: Adam moments
+        are elementwise, so per-view moments pack exactly like the
+        weights.  (int8 moment state cannot be migrated — its row scales
+        are per packed array — so legacy int8 runs need packed_qkv=False
+        or a fresh optimizer.)"""
         params_like = self.model.abstract_params()
         from repro.optim import abstract_opt_state
         opt_like = abstract_opt_state(params_like, self.opt_cfg)
         pspecs = self.model.param_specs()
         ospecs = opt_state_specs(pspecs, self.opt_cfg)
+        defs = None
+        if self.opt_cfg.state_mode == "fp32":
+            pdefs = self.model.param_defs()
+            defs = (pdefs, {"step": None, "m": pdefs, "v": pdefs})
         step, (params, opt) = self.ckpt.restore(
             None, (params_like, opt_like), self.model.mesh,
-            (pspecs, ospecs))
+            (pspecs, ospecs), defs=defs)
         return step, params, opt
 
     # -- loop -------------------------------------------------------------------

@@ -73,10 +73,41 @@ def test_smoke_train_step_grads_finite(arch, mesh):
                for g in flat)
 
 
+def f64_reference_logits(cfg, params, fbatch, mesh):
+    """Last-token teacher-forced logits with f64 params + f64 compute: the
+    precision reference the consistency budget is measured against (norms
+    still run their internal fp32 stages — the GEMM chain, where prefill
+    vs decode rounding can diverge, is what runs at f64)."""
+    import dataclasses as dc
+    from jax.experimental import enable_x64
+    from repro.models.loss import vocab_parallel_logits
+    with enable_x64():
+        cfg64 = dc.replace(cfg, compute_dtype="float64",
+                           param_dtype="float64")
+        model64 = Model(cfg64, mesh)
+        params64 = jax.tree.map(
+            lambda x: x.astype(jnp.float64)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+        fbatch64 = {k: (v.astype(jnp.float64)
+                        if jnp.issubdtype(v.dtype, jnp.floating) else v)
+                    for k, v in fbatch.items()}
+        h64, _, _ = model64.forward(params64, fbatch64, mode="train")
+        ref64 = vocab_parallel_logits(h64[:, -1:],
+                                      model64.head_weights(params64),
+                                      model64.ctx, cfg.final_softcap)[:, 0]
+        return np.asarray(ref64, np.float64)
+
+
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_prefill_decode_consistency(arch, mesh):
-    """Greedy decode after prefill must match the teacher-forced forward:
-    logits at position t from decode == logits from a full forward."""
+    """Greedy decode after prefill must match the teacher-forced forward.
+
+    Budget policy (see ROADMAP): both paths are compared against an f64
+    reference of the same computation; decode may be at most a small
+    multiple of the teacher-forced path's own measured rounding error.
+    The budget is derived from the pipeline's noise, not hand-tuned — a
+    QKV-path change that rounds differently between prefill and decode
+    (e.g. the old apply-time wq/wk/wv concat) blows it."""
     cfg = get_config(arch, smoke=True)
     model = Model(cfg, mesh)
     params = model.init_params(0)
@@ -105,6 +136,17 @@ def test_smoke_prefill_decode_consistency(arch, mesh):
         params, fbatch)
     ref = vocab_parallel_logits(h[:, -1:], model.head_weights(params),
                                 model.ctx, cfg.final_softcap)[:, 0]
-    got = logits_d
-    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=2e-2,
-                               atol=2e-2)
+
+    ref64 = f64_reference_logits(cfg, params, fbatch, mesh)
+    scale = max(1.0, float(np.max(np.abs(ref64))))
+    err_fwd = float(np.max(np.abs(np.asarray(ref, np.float64) - ref64)))
+    err_dec = float(np.max(np.abs(np.asarray(logits_d, np.float64)
+                                  - ref64)))
+    # the low-precision pipeline itself must sit near the f64 reference
+    assert err_fwd < 0.25 * scale, (err_fwd, scale)
+    # decode accuracy within a small multiple of the forward path's own
+    # rounding noise (floor: a few fp32 ulps of the logit scale)
+    budget = 4.0 * err_fwd + 64 * np.finfo(np.float32).eps * scale
+    assert err_dec <= budget, (
+        f"decode drifted from the f64 reference: err_dec={err_dec:.3e} "
+        f"> budget={budget:.3e} (err_fwd={err_fwd:.3e})")

@@ -1,0 +1,326 @@
+"""Packed-QKV parameter tests: view split/pack inverses, init equivalence
+with the legacy schema, single-GEMM dispatch (no apply-time weight concat,
+asserted on traced HLO), numeric equivalence of packed vs legacy apply,
+and legacy-checkpoint migration round-trips."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.launch.hlo_analysis import gemm_dispatches, weight_concat_count
+from repro.launch.mesh import make_mesh
+from repro.models import param as pm
+from repro.models.attention import (
+    attn_defs,
+    attention_apply,
+    qkv_packing,
+    qkv_sizes,
+)
+from repro.models.layers import TPCtx
+from repro.models.lm import Model
+
+
+def _tiny_cfg(**kw) -> ArchConfig:
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=32,
+                n_heads=8, n_kv_heads=4, head_dim=8, d_ff=64, vocab=100)
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh(1, 1)
+
+
+# -- view split / pack -----------------------------------------------------------
+
+@pytest.mark.parametrize("packing", [1, 4, 32])
+def test_split_pack_views_roundtrip(packing):
+    cfg = _tiny_cfg()
+    base = attn_defs(cfg, 1, "float32", False)["wqkv"]
+    d = dataclasses.replace(base, packing=packing)
+    arr = np.random.default_rng(0).standard_normal(d.shape).astype(
+        np.float32)
+    views = pm.split_views(d, arr)
+    assert {k: v.shape for k, v in views.items()} == {
+        "wq": (cfg.d_model, cfg.q_dim), "wk": (cfg.d_model, cfg.kv_dim),
+        "wv": (cfg.d_model, cfg.kv_dim)}
+    back = pm.pack_views(d, views)
+    np.testing.assert_array_equal(np.asarray(back), arr)
+    # and the other direction: pack(split-of-random-views)
+    rng = np.random.default_rng(1)
+    vs = {k: rng.standard_normal(v.shape).astype(np.float32)
+          for k, v in views.items()}
+    again = pm.split_views(d, pm.pack_views(d, vs))
+    for k in vs:
+        np.testing.assert_array_equal(np.asarray(again[k]), vs[k])
+
+
+def test_packed_init_matches_legacy_views():
+    """Each view of the packed init is bitwise the legacy per-view init
+    (same <path>/<view> seed stream) — legacy checkpoints line up."""
+    cfg = _tiny_cfg()
+    for model in (1, 4):
+        packed = pm.initialize(
+            {"attn": attn_defs(cfg, model, "float32", False)}, seed=7)
+        legacy = pm.initialize(
+            {"attn": attn_defs(cfg, model, "float32", False,
+                               packed=False)}, seed=7)
+        d = attn_defs(cfg, model, "float32", False)["wqkv"]
+        views = pm.split_views(d, packed["attn"]["wqkv"])
+        for name in ("wq", "wk", "wv"):
+            np.testing.assert_array_equal(np.asarray(views[name]),
+                                          np.asarray(legacy["attn"][name]))
+
+
+# -- apply equivalence -----------------------------------------------------------
+
+def test_packed_apply_matches_legacy(mesh):
+    """attention_apply with the packed schema == the legacy three-GEMM
+    schema at f32 (train and decode modes)."""
+    cfg = _tiny_cfg()
+    ctx = TPCtx(mesh=mesh, sp=False, compute_dtype=jnp.float32)
+    defs_p = attn_defs(cfg, 1, "float32", False)
+    packed = pm.initialize({"a": defs_p}, seed=3)["a"]
+    legacy = dict(pm.split_views(defs_p["wqkv"], packed["wqkv"]),
+                  wo=packed["wo"])
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, cfg.d_model),
+                          jnp.float32)
+    positions = jnp.arange(16)
+    kw = dict(kind="global", theta=1e4, positions=positions)
+    out_p, _, _ = attention_apply(packed, x, cfg, ctx, **kw)
+    out_l, _, _ = attention_apply(legacy, x, cfg, ctx, **kw)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_l),
+                               rtol=1e-5, atol=1e-5)
+
+    # decode mode against the same cache
+    cache = {"k": jnp.zeros((2, 20, cfg.n_kv_heads, cfg.hd), jnp.float32),
+             "v": jnp.zeros((2, 20, cfg.n_kv_heads, cfg.hd), jnp.float32)}
+    xd = x[:, :1]
+    kwd = dict(kind="global", theta=1e4, positions=jnp.zeros((1,),
+                                                             jnp.int32))
+    dp, cp, _ = attention_apply(packed, xd, cfg, ctx, cache=cache,
+                                pos=jnp.asarray(0), **kwd)
+    dl, cl, _ = attention_apply(legacy, xd, cfg, ctx, cache=cache,
+                                pos=jnp.asarray(0), **kwd)
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dl), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cp["k"]), np.asarray(cl["k"]),
+                               rtol=1e-6, atol=1e-6)
+
+
+# -- single-dispatch / no-weight-concat HLO asserts ------------------------------
+
+def _attn_hlo(params, x, cfg, ctx, **kw):
+    f = jax.jit(lambda p, xx: attention_apply(p, xx, cfg, ctx, **kw)[0])
+    return f.lower(params, x).compile().as_text()
+
+
+def test_single_qkv_gemm_dispatch_no_weight_concat(mesh):
+    """Acceptance: ONE QKV GEMM dispatch per attention apply, and no
+    concatenate of weight shards anywhere in the traced step."""
+    cfg = _tiny_cfg()
+    ctx = TPCtx(mesh=mesh, sp=False, compute_dtype=jnp.float32)
+    params = pm.initialize({"a": attn_defs(cfg, 1, "float32", False)},
+                           seed=0)["a"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    packed_cols = sum(qkv_sizes(cfg))
+    assert packed_cols != cfg.d_model  # keep the two signatures distinct
+
+    hlo = _attn_hlo(params, x, cfg, ctx, kind="global", theta=1e4,
+                    positions=jnp.arange(16))
+    assert weight_concat_count(hlo, cfg.d_model) == 0, hlo
+    assert gemm_dispatches(hlo, packed_cols) == 1
+
+    # decode step: same properties
+    cache = {"k": jnp.zeros((2, 20, cfg.n_kv_heads, cfg.hd), jnp.float32),
+             "v": jnp.zeros((2, 20, cfg.n_kv_heads, cfg.hd), jnp.float32)}
+    f = jax.jit(lambda p, xx, c: attention_apply(
+        p, xx, cfg, ctx, kind="global", theta=1e4,
+        positions=jnp.zeros((1,), jnp.int32), cache=c,
+        pos=jnp.asarray(0))[0])
+    hlo_d = f.lower(params, x[:, :1], cache).compile().as_text()
+    assert weight_concat_count(hlo_d, cfg.d_model) == 0
+    assert gemm_dispatches(hlo_d, packed_cols) == 1
+
+
+def test_detector_fails_on_apply_time_concat(mesh):
+    """Regression guard: the OLD apply-time wq/wk/wv concat produces
+    exactly the HLO signature weight_concat_count flags — if that path
+    ever comes back, the assert above catches it."""
+    cfg = _tiny_cfg()
+    defs_l = attn_defs(cfg, 1, "float32", False, packed=False)
+    legacy = pm.initialize({"a": defs_l}, seed=0)["a"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+
+    def old_path(p, xx):  # the PR-1 approach this PR removes
+        w = jnp.concatenate([p["wq"], p["wk"], p["wv"]], axis=1)
+        return jnp.einsum("bsd,dn->bsn", xx, w)
+
+    hlo = jax.jit(old_path).lower(legacy, x).compile().as_text()
+    assert weight_concat_count(hlo, cfg.d_model) >= 1
+
+
+def test_full_model_step_has_no_weight_concat(mesh):
+    """Whole-model guard on the real config: neither the train step nor a
+    decode step concatenates weight shards."""
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = Model(cfg, mesh)
+    params = model.init_params(0)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(k1, (2, 16), 0, cfg.vocab,
+                                          jnp.int32),
+             "targets": jax.random.randint(k2, (2, 16), 0, cfg.vocab,
+                                           jnp.int32)}
+    hlo_t = jax.jit(model.loss).lower(params, batch).compile().as_text()
+    assert weight_concat_count(hlo_t, cfg.d_model) == 0
+
+    _, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len=24))(params, batch)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    hlo_d = jax.jit(model.decode_step).lower(
+        params, cache, tok, jnp.asarray(16, jnp.int32)).compile().as_text()
+    assert weight_concat_count(hlo_d, cfg.d_model) == 0
+
+
+# -- checkpoint migration --------------------------------------------------------
+
+def test_checkpoint_legacy_migration_roundtrip(tmp_path, mesh):
+    """export_legacy writes wq/wk/wv leaves; restore(defs=...) packs them
+    back bitwise.  Native packed checkpoints restore unchanged through the
+    same call."""
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = Model(cfg, mesh)
+    defs = model.param_defs()
+    params = model.init_params(0)
+    like = pm.abstract(defs)
+    n_packed = len(jax.tree.leaves(params))
+
+    mgr = CheckpointManager(str(tmp_path / "legacy"))
+    mgr.export_legacy(3, params, defs)
+    import json, os
+    with open(os.path.join(str(tmp_path / "legacy"), "step_00000003",
+                           "manifest.json")) as f:
+        manifest = json.load(f)
+    assert len(manifest["leaves"]) > n_packed  # views really were split
+
+    step, out = mgr.restore(None, like, defs=defs)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    mgr2 = CheckpointManager(str(tmp_path / "native"))
+    mgr2.save(1, params, blocking=True)
+    _, out2 = mgr2.restore(None, like, defs=defs)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_true_pre_packing_checkpoint_migrates(tmp_path, mesh):
+    """A checkpoint written by an ACTUAL pre-packing model (packed_qkv
+    False: wq/wk/wv are siblings of wo, the real legacy flatten order)
+    restores bitwise onto the packed schema — per-view init equivalence
+    makes the expected result exactly the packed init."""
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    legacy_model = Model(dataclasses.replace(cfg, packed_qkv=False), mesh)
+    packed_model = Model(cfg, mesh)
+    legacy_params = legacy_model.init_params(0)
+    packed_params = packed_model.init_params(0)
+
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, legacy_params, blocking=True)  # the pre-PR on-disk layout
+    step, out = mgr.restore(None, pm.abstract(packed_model.param_defs()),
+                            defs=packed_model.param_defs())
+    assert step == 7
+    flat_want = jax.tree_util.tree_flatten_with_path(packed_params)[0]
+    flat_got = jax.tree.leaves(out)
+    assert len(flat_want) == len(flat_got)
+    for (path, want), got in zip(flat_want, flat_got):
+        np.testing.assert_array_equal(
+            np.asarray(want), np.asarray(got),
+            err_msg=jax.tree_util.keystr(path))
+
+
+def test_trainer_resumes_from_pre_packing_checkpoint(tmp_path, mesh):
+    """A training run checkpointed under the legacy schema (packed_qkv
+    False: separate wq/wk/wv param AND Adam-moment leaves) resumes onto
+    the packed schema and keeps training — params and fp32 moments are
+    packed in place by the restore migration."""
+    from repro.data import DataConfig, SyntheticTokenSource, TokenPipeline
+    from repro.optim import AdamWConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    dcfg = DataConfig(global_batch=2, seq_len=32)
+    src = SyntheticTokenSource(cfg.vocab)
+
+    def trainer(model_cfg, steps):
+        model = Model(model_cfg, mesh)
+        tcfg = TrainerConfig(steps=steps, ckpt_every=4,
+                             ckpt_dir=str(tmp_path), keep=2, log_every=100)
+        return Trainer(model, AdamWConfig(lr=1e-3), tcfg,
+                       lambda s: TokenPipeline(src, dcfg, mesh, model_cfg,
+                                               start_step=s))
+
+    trainer(dataclasses.replace(cfg, packed_qkv=False), 4).run(0)
+    t2 = trainer(cfg, 8)  # packed schema resumes the legacy checkpoint
+    step, params, opt = t2.restore()
+    assert step == 4
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(params)[0]]
+    assert any("wqkv" in p for p in paths) and not any(
+        "'wq'" in p for p in paths)
+    t2.run(0)  # continues training from the migrated state
+    assert t2.metrics[-1]["step"] == 7
+    assert np.isfinite(t2.metrics[-1]["loss"])
+
+
+def test_serve_engine_from_legacy_checkpoint(tmp_path, mesh):
+    """A legacy checkpoint serves end-to-end through
+    ServeEngine.from_checkpoint (migration inside restore)."""
+    from repro.serve.engine import ServeConfig, ServeEngine
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              compute_dtype="float32")
+    model = Model(cfg, mesh)
+    params = model.init_params(0)
+    CheckpointManager(str(tmp_path)).export_legacy(
+        1, params, model.param_defs())
+    eng = ServeEngine.from_checkpoint(model, str(tmp_path),
+                                      scfg=ServeConfig(max_new_tokens=3))
+    ref = ServeEngine(model, params, ServeConfig(max_new_tokens=3))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(0), (2, 8),
+                                          0, cfg.vocab, jnp.int32)}
+    np.testing.assert_array_equal(eng.generate(batch), ref.generate(batch))
+
+
+def test_packing_factor_policy():
+    """Packing is gcd(q_dim, kv_dim) — a pure function of the arch, never
+    of the mesh, so the on-disk packed layout (and therefore checkpoints)
+    is identical across model-parallel sizes, and every model degree the
+    fused path can use divides it."""
+    cfg = _tiny_cfg()  # q_dim 64, kv_dim 32
+    assert qkv_packing(cfg) == 32
+    cfg2 = _tiny_cfg(n_kv_heads=3, n_heads=6, head_dim=6)  # 36 / 18
+    assert qkv_packing(cfg2) == 18
+    # the defs carry the same packing no matter the model size passed in
+    for model in (1, 2, 4):
+        d = attn_defs(cfg, model, "float32", False)["wqkv"]
+        assert d.packing == qkv_packing(cfg)
+        assert cfg.q_dim % model == 0 and qkv_packing(cfg) % model == 0
+
+
+def test_packed_layout_mesh_independent():
+    """The packed wqkv array is bitwise identical whether initialized for
+    a model=1 or model=4 mesh — the elastic-restore guarantee."""
+    cfg = _tiny_cfg()
+    a1 = pm.initialize({"attn": attn_defs(cfg, 1, "float32", False)},
+                       seed=11)["attn"]["wqkv"]
+    a4 = pm.initialize({"attn": attn_defs(cfg, 4, "float32", False)},
+                       seed=11)["attn"]["wqkv"]
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a4))

@@ -245,6 +245,74 @@ def test_serve_engine_greedy_matches_manual_decode(mesh):
                                       out[:, i + 1])
 
 
+# -- packed-view sharding ------------------------------------------------------------
+
+def test_packed_qkv_specs_match_views_2d_mesh():
+    """param.specs / param.abstract on a packed def agree with the
+    unpacked per-view schema under the 2D (data x model) mesh mapping:
+    same PartitionSpecs, same logical shapes, and each model-column shard
+    of the packed array is exactly [wq_i | wk_i | wv_i]."""
+    from repro.configs.base import ArchConfig
+    from repro.models import param as pm
+    from repro.models.attention import attn_defs
+    cfg = ArchConfig(name="t", family="dense", n_layers=2, d_model=32,
+                     n_heads=8, n_kv_heads=4, head_dim=8, d_ff=64,
+                     vocab=100)
+    MODEL = 4
+    for fsdp in (False, True):
+        packed = attn_defs(cfg, MODEL, "bfloat16", fsdp)
+        legacy = attn_defs(cfg, MODEL, "bfloat16", fsdp, packed=False)
+        d = packed["wqkv"]
+        assert d.packing % MODEL == 0  # mesh-independent G refines m
+        views = pm.view_defs(d)
+        for name in ("wq", "wk", "wv"):
+            assert views[name].spec == legacy[name].spec, (name, fsdp)
+            assert views[name].shape == legacy[name].shape
+            assert views[name].dtype == legacy[name].dtype
+        # abstract trees line up (packed leaf vs per-view leaves)
+        ab_p = pm.abstract({"a": d})["a"]
+        ab_l = pm.abstract(views)
+        assert ab_p.shape[-1] == sum(s.shape[-1] for s in ab_l.values())
+        assert pm.specs({"a": d})["a"] == legacy["wq"].spec
+        # shard alignment, for EVERY model size m dividing G: column block
+        # i split with the local interleave G/m yields exactly the views'
+        # i-th column shards (the property the fused SP body relies on,
+        # and what makes the layout mesh-independent)
+        arr = np.arange(np.prod(d.shape), dtype=np.float32).reshape(d.shape)
+        vs = {k: np.asarray(v) for k, v in pm.split_views(d, arr).items()}
+        for m in (1, 2, MODEL, d.packing):
+            L = d.shape[-1] // m
+            qloc, kvloc = cfg.q_dim // m, cfg.kv_dim // m
+            for i in range(m):
+                shard = arr[:, i * L:(i + 1) * L]
+                ql, kl, vl = pm.split_packed_columns(
+                    shard, (qloc, kvloc, kvloc), d.packing // m)
+                np.testing.assert_array_equal(
+                    ql, vs["wq"][:, i * qloc:(i + 1) * qloc])
+                np.testing.assert_array_equal(
+                    kl, vs["wk"][:, i * kvloc:(i + 1) * kvloc])
+                np.testing.assert_array_equal(
+                    vl, vs["wv"][:, i * kvloc:(i + 1) * kvloc])
+
+
+def test_packed_defs_survive_group_stacking():
+    """_stack_defs keeps views/packing (the scanned-group schema packs the
+    same way), and initialization of stacked packed defs splits back to
+    per-view arrays of the right shape."""
+    from repro.configs import get_config
+    from repro.models import param as pm
+    from repro.models.lm import Model, _stack_defs
+    from repro.models.attention import attn_defs
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    defs = _stack_defs({"attn": attn_defs(cfg, 1, "float32", False)}, 3)
+    d = defs["attn"]["wqkv"]
+    assert d.views is not None and d.shape[0] == 3
+    arr = pm.initialize(defs, 0)["attn"]["wqkv"]
+    views = pm.split_views(d, arr)
+    assert views["wq"].shape == (3, cfg.d_model, cfg.q_dim)
+    assert views["wk"].shape == (3, cfg.d_model, cfg.kv_dim)
+
+
 # -- HLO analyzer ------------------------------------------------------------------
 
 def test_hlo_analyzer_counts_loop_trips():
