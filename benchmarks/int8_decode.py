@@ -1,0 +1,102 @@
+"""Int8 vs fp32 decode-step wall clock (the end-to-end int8 serving path).
+
+One smoke-size model per row, single-shard mesh on this host (XLA CPU
+stand-in; the Pallas int8 kernel compiles natively on TPU).  For each arch
+the decode step is jitted twice — once on the fp32/bf16 params, once on
+the column-quantized ``QuantizedWeight`` params — and timed median-of-N
+with every region closed by ``block_until_ready`` (host timing is noisy;
+the median is the robust per-call estimate).
+
+The derived column carries the correctness invariants alongside the
+timing: ``bounces`` is ``hlo_analysis.int8_bounce_count`` on the traced
+int8 decode (MUST be 0 — no fp32 dequant/requant between GEMMs) and
+``model_hbm_speedup`` is the perf model's byte-ratio prediction for the
+arch's projection GEMMs (the number that materializes on real
+bandwidth-bound hardware; host CPU wall-clock is reported, not gated,
+because XLA CPU has no int8 fast path).
+
+Run directly for a human-readable report:
+
+    PYTHONPATH=src python benchmarks/int8_decode.py
+"""
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ARCHS = ("internlm2-1.8b", "gemma2-27b")
+PROMPT = 16
+DECODE_HEADROOM = 8
+
+
+def _time_us(fn, *args, iters=15):
+    jax.block_until_ready(fn(*args))  # compile + warm
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return sorted(samples)[len(samples) // 2]
+
+
+def _decode_setup(model, params):
+    """(decode_fn, args) for a prefilled cache + one decode step."""
+    cfg = model.cfg
+    batch = {"tokens": (jnp.arange(2 * PROMPT, dtype=jnp.int32)
+                        .reshape(2, PROMPT) % cfg.vocab)}
+    _, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len=PROMPT + DECODE_HEADROOM)
+    )(params, batch)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.asarray(PROMPT, jnp.int32)
+    fn = jax.jit(model.decode_step)
+    return fn, (params, cache, tok, pos)
+
+
+def rows():
+    from repro.configs import get_config
+    from repro.core.perf_model import int8_serving_savings
+    from repro.launch.hlo_analysis import int8_bounce_count
+    from repro.launch.mesh import make_mesh
+    from repro.models.lm import Model
+
+    mesh = make_mesh(1, 1)
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        model = Model(cfg, mesh)
+        params = model.init_params(0)
+        qparams = model.quantize_params_for_serving(params)
+
+        fn_fp, args_fp = _decode_setup(model, params)
+        fn_q, args_q = _decode_setup(model, qparams)
+        # interleaved timing so host contention hits both paths equally
+        us_fp = _time_us(fn_fp, *args_fp)
+        us_q = _time_us(fn_q, *args_q)
+
+        hlo = fn_q.lower(*args_q).compile().as_text()
+        bounces = int8_bounce_count(hlo)
+        sav = int8_serving_savings(2, cfg.d_model, cfg.q_dim
+                                   + 2 * cfg.kv_dim)
+        out.append((
+            f"int8_decode/{arch}", us_q,
+            f"fp32_us={us_fp:.1f};speedup={us_fp / max(us_q, 1e-9):.2f}x;"
+            f"bounces={bounces};"
+            f"model_hbm_speedup={sav['hbm_speedup']:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    print("name,us_per_call,derived")
+    ok = True
+    for name, us, derived in rows():
+        print(f"{name},{us:.2f},{derived}")
+        if "bounces=0" not in derived:
+            ok = False
+    print("ALL_OK" if ok else "INT8_DECODE_HAS_FP32_BOUNCE")
+    sys.exit(0 if ok else 1)

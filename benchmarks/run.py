@@ -11,11 +11,11 @@ import sys
 def main() -> None:
     sys.path.insert(0, "src")
     from benchmarks import table1_kernels, table23_array, fig8_sizes, \
-        tpu_matmul, roofline_report, fused_epilogue
+        tpu_matmul, roofline_report, fused_epilogue, int8_decode
 
     print("name,us_per_call,derived")
     for mod in (table1_kernels, table23_array, fig8_sizes, tpu_matmul,
-                roofline_report, fused_epilogue):
+                roofline_report, fused_epilogue, int8_decode):
         for name, us, derived in mod.rows():
             print(f"{name},{us:.2f},{derived}")
 

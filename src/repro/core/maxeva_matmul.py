@@ -271,7 +271,15 @@ def xyz_matmul(
     ep = cfg.epilogue
     _check_epilogue_operands(ep, bias, residual)
     if model == 1:
-        w = unshard_weight_xyz(w_xyz, cfg.y)
+        from repro.kernels.quantize import QuantizedWeight
+        if isinstance(w_xyz, QuantizedWeight):
+            # int8 serving path: the single-shard xyz layout [1, K, N] is
+            # consumed as the quantized matrix directly (kops.matmul
+            # quantizes x rowwise and folds both scales into the store
+            # phase — no dequantized fp32 weight ever materializes)
+            w = w_xyz
+        else:
+            w = unshard_weight_xyz(w_xyz, cfg.y)
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
         if ep is None:

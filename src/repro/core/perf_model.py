@@ -264,6 +264,54 @@ def fused_epilogue_savings(m: int, n: int, epilogue,
     }
 
 
+def gemm_arithmetic_intensity(m: int, k: int, n: int, dtype: str = "bf16",
+                              out_itemsize: Optional[int] = None) -> float:
+    """FLOPs per HBM byte of an ``[m, k] x [k, n]`` GEMM at the given
+    precision (the roofline x-coordinate).  int8 operands quadruple the
+    intensity of the same shape vs fp32 — the reason the paper's int8
+    pipeline reaches 14x fp32 throughput only while tensors STAY int8
+    between GEMMs."""
+    from repro.core.device_model import DTYPE_BYTES
+    eb = DTYPE_BYTES[dtype]
+    ob = eb if out_itemsize is None else out_itemsize
+    by = (m * k + k * n) * eb + m * n * ob
+    if dtype == "int8":
+        by += 4 * (m + n)  # row/col scale vectors
+    return 2.0 * m * k * n / by
+
+
+def int8_serving_savings(m: int, k: int, n: int,
+                         device=None) -> Dict[str, float]:
+    """What the end-to-end int8 GEMM buys over the fp32-bounce baseline
+    for one ``[m, k] x [k, n]`` projection (serving decode: m = batch).
+
+    ``bytes_*``/``seconds_saved`` follow ``planner.int8_gemm_hbm_bytes``:
+    the fused path streams int8 operands + scale vectors once; the bounce
+    path dequantizes both operands through HBM and round-trips the fp32
+    result.  ``compute_speedup`` is the MXU-rate ratio (int8 runs the
+    systolic array at twice bf16, 8x fp32 on v5e); decode is
+    bandwidth-bound, so the byte ratio is the one that shows up in step
+    time.  Consumed by ``benchmarks/int8_decode.py`` and the planner
+    tests."""
+    from repro.core.device_model import TPU_V5E
+    from repro.core.planner import int8_gemm_hbm_bytes
+    device = device or TPU_V5E
+    fused = int8_gemm_hbm_bytes(m, k, n, fused=True)
+    bounced = int8_gemm_hbm_bytes(m, k, n, fused=False)
+    return {
+        "bytes_int8_fused": float(fused),
+        "bytes_fp32_bounce": float(bounced),
+        "bytes_saved": float(bounced - fused),
+        "seconds_saved": (bounced - fused) / device.hbm_bw,
+        "hbm_speedup": bounced / max(fused, 1),
+        "compute_speedup": (device.peak_flops["int8"]
+                            / device.peak_flops["fp32"]),
+        "intensity_int8": gemm_arithmetic_intensity(m, k, n, "int8",
+                                                    out_itemsize=1),
+        "intensity_fp32": gemm_arithmetic_intensity(m, k, n, "fp32"),
+    }
+
+
 def mlp_inference_gflops(layer_dims: List[int], batch: int,
                          cfg: ArrayConfig, precision: str = "fp32") -> float:
     """End-to-end MLP MatMul throughput under the Fig. 8 padding model.

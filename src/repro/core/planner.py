@@ -210,12 +210,37 @@ def epilogue_hbm_bytes(m: int, n: int, epilogue=None,
         return 4 * m * n if fused else 3 * 4 * m * n
     out_b = m * n * epilogue.out_itemsize()
     if epilogue.quantize:
-        out_b += m * 4  # scale column
+        # scale vector: one f32 per row ('row') or per column ('col')
+        out_b += (m if getattr(epilogue, "quantize_axis", "row") == "row"
+                  else n) * 4
     operand_b = (n * 4 if epilogue.bias else 0) + (
         m * n * epilogue.out_itemsize() if epilogue.residual else 0)
     if fused:
         return out_b + operand_b
     return 2 * 4 * m * n + out_b + operand_b
+
+
+def int8_gemm_hbm_bytes(m: int, k: int, n: int, fused: bool = True,
+                        out_itemsize: int = 2) -> int:
+    """HBM bytes of the serving int8 GEMM ``[m, k] x [k, n]``.
+
+    fused:   the paper's pipeline (§IV-C1) — int8 operands stream in with
+             their f32 row/col scale vectors, the int32 accumulator never
+             leaves VMEM, scales are re-applied in the store phase, and
+             ONE finished output is written.
+    unfused: the fp32 *bounce* the serving path must avoid — both
+             operands are dequantized to fp32 (int8 read + fp32 write +
+             fp32 read-back each), the GEMM runs on 4-byte operands, and
+             the fp32 result round-trips once more before the output
+             store.  ``hlo_analysis.int8_bounce_count`` is the HLO-level
+             guard against exactly this pattern.
+    """
+    a_b, w_b, o_b = m * k, k * n, m * n
+    scales = 4 * (m + n)
+    if fused:
+        return a_b + w_b + scales + out_itemsize * o_b
+    dequant = (a_b + 4 * a_b + 4 * a_b) + (w_b + 4 * w_b + 4 * w_b)
+    return dequant + scales + 2 * 4 * o_b + out_itemsize * o_b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -407,6 +432,10 @@ def plan_tpu_shard(
             # output once; the unfused baseline would round-trip the fp32
             # accumulator (epilogue_hbm_bytes accounts for the savings).
             in_bytes = (m_loc * (k // y) + (k // y) * (n // z)) * ebytes
+            if dtype == "int8":
+                # the quantized pipeline streams f32 scale vectors next to
+                # the 1-byte operands (rowwise for A, colwise for W)
+                in_bytes += 4 * (m_loc + n // z)
             out_bytes = epilogue_hbm_bytes(m_loc, n // z, epilogue,
                                            fused=True) \
                 if epilogue is not None else m_loc * (n // z) * ebytes
@@ -416,7 +445,7 @@ def plan_tpu_shard(
             #    charged only if A arrives sharded over the model axis;
             #  * partial-C reduction over Y (the adder tree).
             a_bytes = m_loc * (k // y) * ebytes
-            c_bytes = m_loc * (n // z) * 4  # fp32 partials
+            c_bytes = m_loc * (n // z) * 4  # 32-bit partials (fp32/int32)
             wire = 0.0
             if a_sharded_on_model and z > 1:
                 wire += (z - 1) / z * a_bytes / device.ici_bw_per_link

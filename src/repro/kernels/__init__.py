@@ -1,22 +1,30 @@
 # Pallas compute hot-spots the paper optimizes: the MatMul kernel itself
 # (§IV-C1), the adder-tree Add kernel (§IV-B), and the int8 quantizer
-# feeding the paper's int8 pipeline.
+# feeding the paper's int8 pipeline (rowwise activations, columnwise
+# weights, scales re-applied in the fused epilogue).
 from repro.kernels.epilogue import Epilogue, apply_epilogue
 from repro.kernels.ops import (
     addertree,
     dequantize_rowwise,
+    int8_matmul,
     kernel_mode,
     matmul,
+    quantize_colwise,
     quantize_rowwise,
     set_kernel_mode,
 )
+from repro.kernels.quantize import QuantizedWeight, quantize_weight_colwise
 
 __all__ = [
     "Epilogue",
     "apply_epilogue",
     "matmul",
+    "int8_matmul",
     "addertree",
     "quantize_rowwise",
+    "quantize_colwise",
+    "quantize_weight_colwise",
+    "QuantizedWeight",
     "dequantize_rowwise",
     "set_kernel_mode",
     "kernel_mode",

@@ -18,10 +18,23 @@ numerically identical by construction.
 Application order (all math in fp32 — or the int32 accumulator is first
 upcast when any step beyond the cast is requested):
 
-    acc -> (+ bias) -> activation -> (+ residual) -> cast | rowwise-int8
+    acc -> (* row/col scales) -> (+ bias) -> activation -> (+ residual)
+        -> cast | rowwise/colwise-int8
 
-With ``quantize=True`` the epilogue emits ``(q int8 [M, N], scale f32
-[M, 1])`` as the kernel's two outputs and ``out_dtype`` is ignored.
+The scale step is the int8 pipeline's dequantization (paper §IV-C1: int8
+inputs accumulate in int32 and the scales are re-applied *on the way
+out*): an int8 x int8 GEMM passes its activation rowwise scale
+(``row_scale [M, 1]``) and weight columnwise scale (``col_scale [1, N]``)
+so the int32 -> fp32 boundary happens exactly once, inside the store
+phase — the quantized serving path never bounces through an fp32 HBM
+tensor between GEMMs.
+
+With ``quantize=True`` the epilogue emits ``(q int8, scale f32)`` as the
+kernel's two outputs and ``out_dtype`` is ignored.  ``quantize_axis``
+picks the scale granularity: ``'row'`` (scale ``[M, 1]``, one per
+activation row — the layout the next layer's int8 GEMM consumes) or
+``'col'`` (scale ``[1, N]``, one per output column — the weight /
+weight-grad layout).
 """
 from __future__ import annotations
 
@@ -32,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 _ACTIVATIONS = ("none", "gelu", "silu", "relu")
+_QUANT_AXES = ("row", "col")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,8 +57,10 @@ class Epilogue:
     residual:   add a ``[M, N]`` residual (operand supplied at call time).
     out_dtype:  storage dtype of the single output (None -> accumulator
                 dtype).  Ignored when ``quantize`` is set.
-    quantize:   rowwise symmetric int8 quantization; the GEMM emits
-                ``(q, scale)`` instead of one output.
+    quantize:   symmetric int8 quantization; the GEMM emits ``(q, scale)``
+                instead of one output.
+    quantize_axis: 'row' (scale [M, 1], activation layout) or 'col'
+                (scale [1, N], weight/weight-grad layout).
     """
 
     bias: bool = False
@@ -52,9 +68,11 @@ class Epilogue:
     residual: bool = False
     out_dtype: Optional[Any] = None
     quantize: bool = False
+    quantize_axis: str = "row"
 
     def __post_init__(self):
         assert self.activation in _ACTIVATIONS, self.activation
+        assert self.quantize_axis in _QUANT_AXES, self.quantize_axis
 
     @property
     def is_identity(self) -> bool:
@@ -68,7 +86,7 @@ class Epilogue:
 
     def out_itemsize(self, acc_dtype=jnp.float32) -> int:
         """Bytes per output element actually stored to HBM (the quantize
-        scale column is amortized over N and ignored here)."""
+        scale vector is amortized over the other dim and ignored here)."""
         if self.quantize:
             return 1
         return jnp.dtype(self.out_dtype or acc_dtype).itemsize
@@ -84,22 +102,41 @@ def _activate(x: jnp.ndarray, activation: str) -> jnp.ndarray:
     return x
 
 
+def quantize_symmetric(x: jnp.ndarray, axis: int
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization along ``axis`` (the reduced axis):
+    ``axis=-1`` gives per-row scales, ``axis=-2`` per-column scales."""
+    absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = (jnp.maximum(absmax, 1e-12) / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
 def apply_epilogue(
     acc: jnp.ndarray,
     ep: Epilogue,
     bias: Optional[jnp.ndarray] = None,
     residual: Optional[jnp.ndarray] = None,
+    row_scale: Optional[jnp.ndarray] = None,
+    col_scale: Optional[jnp.ndarray] = None,
 ) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
     """Apply ``ep`` to an accumulator (tile or full matrix).
 
-    ``acc`` is the 32-bit GEMM accumulator.  ``bias`` broadcasts over rows
-    (shape ``[N]`` or ``[1, N]``); ``residual`` matches ``acc``.  Returns
-    the cast output, or ``(q, scale)`` under ``quantize``.
+    ``acc`` is the 32-bit GEMM accumulator.  ``row_scale [M, 1]`` /
+    ``col_scale [1, N]`` dequantize an int8 GEMM's int32 accumulator at
+    the fp32 boundary (both broadcast over ``acc``).  ``bias`` broadcasts
+    over rows (shape ``[N]`` or ``[1, N]``); ``residual`` matches ``acc``.
+    Returns the cast output, or ``(q, scale)`` under ``quantize``.
     """
-    if ep.is_identity:
+    scaled = row_scale is not None or col_scale is not None
+    if ep.is_identity and not scaled:
         return acc.astype(ep.out_dtype) if ep.out_dtype else acc
 
     x = acc.astype(jnp.float32)
+    if row_scale is not None:
+        x = x * row_scale.astype(jnp.float32)
+    if col_scale is not None:
+        x = x * col_scale.astype(jnp.float32)
     if ep.bias:
         assert bias is not None, "Epilogue.bias set but no bias operand"
         b = bias.astype(jnp.float32)
@@ -111,9 +148,10 @@ def apply_epilogue(
         x = x + residual.astype(jnp.float32)
 
     if ep.quantize:
-        absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-        scale = (jnp.maximum(absmax, 1e-12) / 127.0).astype(jnp.float32)
-        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-        return q, scale
+        return quantize_symmetric(
+            x, axis=-1 if ep.quantize_axis == "row" else -2)
 
-    return x.astype(ep.out_dtype or acc.dtype)
+    # an int8 (scaled) accumulator that was dequantized defaults to fp32
+    # output, never back to the int32 container dtype
+    default = jnp.float32 if scaled else acc.dtype
+    return x.astype(ep.out_dtype or default)

@@ -53,14 +53,21 @@ from repro.kernels.ref import accum_dtype
 
 
 def _matmul_kernel(*refs, k_steps: int, out_dtype, epilogue: Epilogue,
+                   has_a_scale: bool, has_b_scale: bool,
                    has_bias: bool, has_residual: bool):
     """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis; the
     fp32/int32 accumulator tile lives in VMEM scratch across K steps.  The
     epilogue runs on the accumulator tile at the final K step (the store
-    phase), so the only HBM write is the finished output."""
+    phase), so the only HBM write is the finished output.  With int8
+    inputs the row/col quantization scales are re-applied right there (the
+    paper's int32 -> output boundary), never via a separate dequant op."""
     refs = list(refs)
     a_ref, b_ref = refs[:2]
     pos = 2
+    as_ref = refs[pos] if has_a_scale else None
+    pos += int(has_a_scale)
+    bs_ref = refs[pos] if has_b_scale else None
+    pos += int(has_b_scale)
     bias_ref = refs[pos] if has_bias else None
     pos += int(has_bias)
     res_ref = refs[pos] if has_residual else None
@@ -79,13 +86,15 @@ def _matmul_kernel(*refs, k_steps: int, out_dtype, epilogue: Epilogue,
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _store():
         acc = acc_ref[...]
-        if epilogue.is_identity:
+        if epilogue.is_identity and not (has_a_scale or has_b_scale):
             out_refs[0][...] = acc.astype(out_dtype)
             return
         out = apply_epilogue(
             acc, epilogue,
             bias=bias_ref[...] if has_bias else None,
             residual=res_ref[...] if has_residual else None,
+            row_scale=as_ref[...] if has_a_scale else None,
+            col_scale=bs_ref[...] if has_b_scale else None,
         )
         if epilogue.quantize:
             q, s = out
@@ -117,6 +126,8 @@ def matmul_pallas(
     interpret: bool = False,
     cost_hint: bool = True,
     epilogue: Optional[Epilogue] = None,
+    a_scale: Optional[jnp.ndarray] = None,
+    b_scale: Optional[jnp.ndarray] = None,
     bias: Optional[jnp.ndarray] = None,
     residual: Optional[jnp.ndarray] = None,
 ):
@@ -124,8 +135,13 @@ def matmul_pallas(
 
     Inputs are zero-padded to block multiples (the paper's Fig. 8 padding
     model) and the result is sliced back.  With ``epilogue.quantize`` the
-    return value is ``(q int8 [M, N], scale f32 [M, 1])``; otherwise a
-    single ``[M, N]`` array in the epilogue/out dtype.
+    return value is ``(q int8 [M, N], scale f32 [M, 1])`` (``[1, N]``
+    under ``quantize_axis='col'``); otherwise a single ``[M, N]`` array in
+    the epilogue/out dtype.
+
+    ``a_scale [M, 1]`` / ``b_scale [1, N]`` are the int8 pipeline's
+    quantization scales, re-applied on the int32 accumulator tile in the
+    store phase (before bias/activation) — int8 in, one HBM write out.
     """
     assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
     ep = epilogue or Epilogue()
@@ -133,10 +149,16 @@ def matmul_pallas(
     _, n = b.shape
     bm, bk, bn = block
     acc = accum_dtype(a.dtype)
-    out_dtype = ep.out_dtype or out_dtype or acc
+    scaled = a_scale is not None or b_scale is not None
+    out_dtype = ep.out_dtype or out_dtype or (jnp.float32 if scaled
+                                              else acc)
 
+    if ep.quantize and ep.quantize_axis == "col":
+        # colwise scale needs the whole column in one tile: M is one block
+        # (sublane-aligned); zero-pad rows cannot raise a column's absmax.
+        bm = _ceil_mult(m, 8)
     ap = _pad_to(a, bm, bk)
-    if ep.quantize:
+    if ep.quantize and ep.quantize_axis == "row":
         # rowwise scale needs the whole row in one tile: N is one block
         # (lane-aligned), exactly like kernels.quantize — zero-pad columns
         # cannot raise a row's absmax.
@@ -151,6 +173,14 @@ def matmul_pallas(
         pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
     ]
     operands = [ap, bp]
+    if a_scale is not None:
+        assert a_scale.shape == (m, 1), (a_scale.shape, m)
+        in_specs.append(pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)))
+        operands.append(_pad_to(a_scale, bm, 1))
+    if b_scale is not None:
+        assert b_scale.shape == (1, n), (b_scale.shape, n)
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+        operands.append(_pad_to(b_scale, 1, bn))
     if ep.bias:
         assert bias is not None and bias.shape[-1] == n, (
             "epilogue.bias requires a [N] bias operand")
@@ -165,20 +195,21 @@ def matmul_pallas(
         operands.append(_pad_to(residual, bm, bn))
 
     if ep.quantize:
-        out_specs = [
-            pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-            pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)),
-        ]
-        out_shape = [
-            jax.ShapeDtypeStruct((mp, np_), jnp.int8),
-            jax.ShapeDtypeStruct((mp, 1), jnp.float32),
-        ]
+        out_specs = [pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))]
+        out_shape = [jax.ShapeDtypeStruct((mp, np_), jnp.int8)]
+        if ep.quantize_axis == "row":
+            out_specs.append(pl.BlockSpec((bm, 1), lambda i, j, s: (i, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((mp, 1), jnp.float32))
+        else:
+            out_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+            out_shape.append(jax.ShapeDtypeStruct((1, np_), jnp.float32))
     else:
         out_specs = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
         out_shape = jax.ShapeDtypeStruct((mp, np_), out_dtype)
 
     kernel = functools.partial(
         _matmul_kernel, k_steps=grid[2], out_dtype=out_dtype, epilogue=ep,
+        has_a_scale=a_scale is not None, has_b_scale=b_scale is not None,
         has_bias=ep.bias, has_residual=ep.residual,
     )
     params = {}
@@ -195,10 +226,13 @@ def matmul_pallas(
         # unfused sequence would add an fp32 accumulator write + read.
         out_bytes = mp * np_ * ep.out_itemsize(acc)
         if ep.quantize:
-            out_bytes += mp * 4  # scale column
+            # scale vector: a column (rowwise) or a row (colwise)
+            out_bytes += (mp if ep.quantize_axis == "row" else np_) * 4
         extra_in = (np_ * 4 if ep.bias else 0) + (
             mp * np_ * jnp.dtype(residual.dtype).itemsize
             if ep.residual else 0)
+        extra_in += (mp * 4 if a_scale is not None else 0) + (
+            np_ * 4 if b_scale is not None else 0)
         cost = pl.CostEstimate(
             flops=2 * mp * kp * np_,
             bytes_accessed=(mp * kp * ap.dtype.itemsize
@@ -220,7 +254,8 @@ def matmul_pallas(
     )(*operands)
     if ep.quantize:
         q, s = out
-        return q[:m, :n], s[:m]
+        return (q[:m, :n], s[:m]) if ep.quantize_axis == "row" \
+            else (q[:m, :n], s[:, :n])
     return out[:m, :n]
 
 

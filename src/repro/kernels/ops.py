@@ -21,7 +21,7 @@ from repro.kernels import ref
 from repro.kernels.epilogue import Epilogue
 from repro.kernels.matmul import matmul_pallas
 from repro.kernels.addertree import addertree_pallas
-from repro.kernels.quantize import quantize_rowwise_pallas
+from repro.kernels.quantize import QuantizedWeight, quantize_rowwise_pallas
 
 # 'auto': pallas on TPU, XLA elsewhere.  'pallas': force pallas (native).
 # 'interpret': force pallas interpret mode (CPU validation).  'xla': force
@@ -68,6 +68,17 @@ def default_block(m: int, k: int, n: int, dtype: str) -> Tuple[int, int, int]:
     return (b.bm, b.bk, b.bn)
 
 
+def _clamped_default_block(m: int, k: int, n: int,
+                           dtype: str) -> Tuple[int, int, int]:
+    """Planned block, never exceeding the (padded) problem itself."""
+    block = default_block(m, k, n, dtype)
+    return (
+        min(block[0], _round_pow2_up(m)),
+        min(block[1], _round_pow2_up(k)),
+        min(block[2], _round_pow2_up(n)),
+    )
+
+
 def matmul(
     a: jnp.ndarray,
     b: jnp.ndarray,
@@ -86,12 +97,23 @@ def matmul(
     With ``epilogue`` the bias/activation/residual/cast/quantize sequence
     runs in the kernel's store phase (one HBM write); the XLA path applies
     the same spec via ``ref.matmul_fused_ref`` (identical semantics, and
-    XLA fuses the elementwise tail into the dot consumer)."""
+    XLA fuses the elementwise tail into the dot consumer).
+
+    ``b`` may be a ``QuantizedWeight`` (the int8 serving path): ``a`` is
+    then rowwise-quantized and the GEMM runs int8 x int8 -> int32 with
+    both scales re-applied inside the epilogue — no fp32 weight dequant
+    ever reaches the HLO."""
     mode = mode or kernel_mode()
     if epilogue is None:
         assert bias is None and residual is None, (
             "bias/residual operands require an Epilogue spec "
             "(e.g. epilogue=Epilogue(bias=True))")
+    if isinstance(b, QuantizedWeight):
+        qa, sa = quantize_rowwise(a, mode=mode)
+        qb, sb = b.as_matrix()
+        return int8_matmul(qa, sa, qb, sb, out_dtype=out_dtype,
+                           block=block, mode=mode, epilogue=epilogue,
+                           bias=bias, residual=residual)
     if mode == "xla":
         if epilogue is None:
             return ref.matmul_ref(a, b, out_dtype)
@@ -102,18 +124,59 @@ def matmul(
         return ref.matmul_fused_ref(a, b, epilogue, bias=bias,
                                     residual=residual)
     if block is None:
-        block = default_block(a.shape[0], a.shape[1], b.shape[1],
-                              str(a.dtype))
-        # never exceed the (padded) problem itself
-        block = (
-            min(block[0], _round_pow2_up(a.shape[0])),
-            min(block[1], _round_pow2_up(a.shape[1])),
-            min(block[2], _round_pow2_up(b.shape[1])),
-        )
+        block = _clamped_default_block(a.shape[0], a.shape[1], b.shape[1],
+                                       str(a.dtype))
     return matmul_pallas(
         a, b, block=block, out_dtype=out_dtype,
         interpret=(mode == "interpret"), epilogue=epilogue, bias=bias,
         residual=residual,
+    )
+
+
+def int8_matmul(
+    qa: jnp.ndarray,
+    sa: jnp.ndarray,
+    qb: jnp.ndarray,
+    sb: jnp.ndarray,
+    *,
+    out_dtype=None,
+    block: Optional[Tuple[int, int, int]] = None,
+    mode: Optional[str] = None,
+    epilogue: Optional[Epilogue] = None,
+    bias: Optional[jnp.ndarray] = None,
+    residual: Optional[jnp.ndarray] = None,
+):
+    """Planned, blocked int8 x int8 -> int32 GEMM with both quantization
+    scales folded into the fused epilogue (paper §IV-C1: int8 inputs,
+    int32 accumulation, scales re-applied on the way out).
+
+    ``qa [M, K]`` int8 activations with rowwise scales ``sa [M, 1]`` —
+    exactly the ``(q, scale)`` pair the fused quantize epilogue of the
+    previous GEMM (or ``quantize_rowwise``) emits; ``qb [K, N]`` int8
+    weights with columnwise scales ``sb [1, N]`` (the one-shot serving
+    weight-quantization layout).  The int32 -> fp32 boundary lives inside
+    the store phase, so consecutive quantized GEMMs never bounce through
+    a dequantized fp32 tensor in HBM."""
+    assert qa.dtype == jnp.int8 and qb.dtype == jnp.int8, (qa.dtype,
+                                                          qb.dtype)
+    mode = mode or kernel_mode()
+    ep = epilogue or Epilogue()
+    assert ep.bias or bias is None, (
+        "a bias operand requires Epilogue(bias=True)")
+    assert ep.residual or residual is None, (
+        "a residual operand requires Epilogue(residual=True)")
+    if out_dtype is not None and ep.out_dtype is None:
+        import dataclasses
+        ep = dataclasses.replace(ep, out_dtype=out_dtype)
+    if mode == "xla":
+        return ref.int8_matmul_ref(qa, sa, qb, sb, ep, bias=bias,
+                                   residual=residual)
+    if block is None:
+        block = _clamped_default_block(qa.shape[0], qa.shape[1],
+                                       qb.shape[1], "int8")
+    return matmul_pallas(
+        qa, qb, block=block, interpret=(mode == "interpret"), epilogue=ep,
+        a_scale=sa, b_scale=sb, bias=bias, residual=residual,
     )
 
 
@@ -147,6 +210,22 @@ def quantize_rowwise(
         x, block_rows=min(block_rows, _round_pow2_up(x.shape[0])),
         interpret=(mode == "interpret"),
     )
+
+
+def quantize_colwise(
+    x: jnp.ndarray, *, block_rows: int = 256, mode: Optional[str] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Column-wise symmetric int8 quantization (weight / weight-grad
+    layout): (q [M, N], scale [1, N]).  The Pallas path reuses the rowwise
+    kernel on the transpose (the reduction is the kernel's fast axis
+    either way); XLA mode uses the direct reference."""
+    mode = mode or kernel_mode()
+    if mode == "xla" or x.ndim != 2:
+        return ref.quantize_colwise_ref(x)
+    q_t, s_t = quantize_rowwise_pallas(
+        x.T, block_rows=min(block_rows, _round_pow2_up(x.shape[1])),
+        interpret=(mode == "interpret"))
+    return q_t.T, s_t.reshape(1, -1)
 
 
 def dequantize_rowwise(q, scale, dtype=jnp.float32):

@@ -1,17 +1,74 @@
-"""Row-wise symmetric int8 quantization Pallas kernel.
+"""Row-wise symmetric int8 quantization Pallas kernel, plus the
+``QuantizedWeight`` container the int8 serving path stores weights in.
 
 Supports the paper's int8 MatMul pipeline (int8 inputs, int32 accumulation,
-scales re-applied on the way out) and the int8 error-feedback gradient
-compression used by the distributed optimizer (``optim.compression``).
+scales re-applied on the way out), the int8 error-feedback gradient
+compression used by the distributed optimizer (``optim.compression``), and
+the one-shot column-wise weight quantization of the serving engine.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedWeight:
+    """An int8-quantized GEMM weight with per-column scales.
+
+    ``q`` keeps the original weight's shape (possibly with leading stack
+    axes: a scan group axis, or the xyz layout's model axis); ``scale`` is
+    f32 with the second-to-last axis reduced to 1 (one scale per output
+    column), so both leaves share every leading axis and a ``lax.scan``
+    over stacked layer groups slices them in lockstep.
+
+    Serving-only: produced by ``Model.quantize_params_for_serving`` after
+    checkpoint restore, never checkpointed or trained.
+    """
+
+    q: jnp.ndarray       # int8 [..., K, N]
+    scale: jnp.ndarray   # f32  [..., 1, N]
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    def as_matrix(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Collapse leading singleton axes to the 2D GEMM operand pair
+        ``(q [K, N], scale [1, N])`` — e.g. the xyz layout's ``[1, K, N]``
+        single-shard weight."""
+        k, n = self.q.shape[-2], self.q.shape[-1]
+        assert all(s == 1 for s in self.q.shape[:-2]), self.q.shape
+        return self.q.reshape(k, n), self.scale.reshape(1, n)
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        return (self.q.astype(jnp.float32) * self.scale).astype(dtype)
+
+
+def quantize_weight_colwise(w: jnp.ndarray) -> QuantizedWeight:
+    """One-shot column-wise weight quantization (the serving pass): one
+    scale per output column, shared by every row of the contraction — the
+    layout the int8 GEMM's store-phase epilogue folds back in."""
+    from repro.kernels.ref import quantize_colwise_ref
+    q, s = quantize_colwise_ref(w)
+    return QuantizedWeight(q, s)
 
 
 def _quantize_kernel(x_ref, q_ref, s_ref):
@@ -36,6 +93,10 @@ def quantize_rowwise_pallas(
     """
     assert x.ndim == 2
     m, n = x.shape
+    if m == 0:
+        # zero rows: nothing to reduce — a 0-length grid is ill-formed, so
+        # return the (well-defined) empty result directly
+        return (jnp.zeros((0, n), jnp.int8), jnp.zeros((0, 1), jnp.float32))
     pm = (-m) % block_rows
     xp = jnp.pad(x, ((0, pm), (0, 0))) if pm else x
     mp = xp.shape[0]

@@ -65,10 +65,17 @@ def addertree_ref(partials: jnp.ndarray,
 def quantize_rowwise_ref(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Row-wise symmetric int8 quantization: q = round(x / s), s = absmax/127.
     Returns (q int8 [M, N], scale f32 [M, 1])."""
-    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = (jnp.maximum(absmax, 1e-12) / 127.0).astype(jnp.float32)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
-    return q.astype(jnp.int8), scale
+    from repro.kernels.epilogue import quantize_symmetric
+    return quantize_symmetric(x.astype(jnp.float32), axis=-1)
+
+
+def quantize_colwise_ref(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Column-wise symmetric int8 quantization (the weight / weight-grad
+    layout): q = round(x / s), s = per-column absmax / 127.  Works on any
+    rank >= 2 (leading axes, e.g. a scan group axis, pass through).
+    Returns (q int8 [..., K, N], scale f32 [..., 1, N])."""
+    from repro.kernels.epilogue import quantize_symmetric
+    return quantize_symmetric(x.astype(jnp.float32), axis=-2)
 
 
 def dequantize_rowwise_ref(q: jnp.ndarray, scale: jnp.ndarray,
@@ -76,11 +83,30 @@ def dequantize_rowwise_ref(q: jnp.ndarray, scale: jnp.ndarray,
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+def int8_matmul_ref(qa: jnp.ndarray, sa: jnp.ndarray, qb: jnp.ndarray,
+                    sb: jnp.ndarray, epilogue=None,
+                    bias: Optional[jnp.ndarray] = None,
+                    residual: Optional[jnp.ndarray] = None):
+    """epilogue(sa * sb * (QA @ QB)): the serving int8 GEMM's XLA mirror.
+
+    ``qa [M, K]`` int8 with rowwise scales ``sa [M, 1]``; ``qb [K, N]``
+    int8 with columnwise scales ``sb [1, N]``.  Accumulation is int32 and
+    both scales are re-applied at the int32 -> fp32 boundary INSIDE the
+    epilogue (paper §IV-C1: scales come back on the way out), so the
+    quantized pipeline never materializes a dequantized fp32 operand.
+    Shares ``apply_epilogue`` with the Pallas kernel's store phase."""
+    from repro.kernels.epilogue import Epilogue, apply_epilogue
+    acc = jnp.dot(qa, qb, preferred_element_type=jnp.int32)
+    return apply_epilogue(acc, epilogue or Epilogue(), bias=bias,
+                          residual=residual, row_scale=sa, col_scale=sb)
+
+
 def quantized_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
                          out_dtype=jnp.float32) -> jnp.ndarray:
     """int8 x int8 -> int32 matmul with row/col scales applied afterwards:
     the fully-quantized MatMul path (paper's int8 pipeline)."""
     qa, sa = quantize_rowwise_ref(a)
-    qb, sb = quantize_rowwise_ref(b.T)  # column-wise scales for B
-    acc = jnp.dot(qa, qb.T, preferred_element_type=jnp.int32)
-    return (acc.astype(jnp.float32) * sa * sb.T).astype(out_dtype)
+    qb, sb = quantize_colwise_ref(b)
+    from repro.kernels.epilogue import Epilogue
+    return int8_matmul_ref(qa, sa, qb, sb,
+                           Epilogue(out_dtype=out_dtype))

@@ -190,6 +190,97 @@ def gemm_dispatches(text: str, out_cols: int) -> int:
     return count
 
 
+def _dtype_of(shape: str) -> str:
+    m = _SHAPE_RE.match(shape.replace("%", ""))
+    return m.group(1) if m else ""
+
+
+_FLOAT_DTYPES = {"f16", "bf16", "f32", "f64"}
+
+
+def int8_bounce_count(text: str) -> int:
+    """Count GEMMs fed by a dequantized int8 tensor — the fp32 bounce the
+    end-to-end int8 serving path must not contain.
+
+    A *bounce* is an ``s8 -> float`` ``convert`` whose value (propagated
+    through elementwise ops, fusions, calls and loops) reaches a ``dot``:
+    either a quantized weight/activation dequantized back to fp for a
+    float GEMM (the naive "quantize weights, dequantize to matmul"
+    implementation), or a dequant -> requant round trip between
+    consecutive GEMMs.  The clean int8 pipeline keeps GEMM inputs in int8
+    (XLA widens them to ``s32`` for the int32-accumulating dot — an
+    integer convert, not counted) and re-applies scales on the int32
+    accumulator AFTER the dot, so a traced int8 decode must report ZERO.
+
+    Taint propagation is conservative across called computations (any
+    tainted operand taints every parameter of the callee; a callee with
+    any tainted instruction taints the call-site result), which can only
+    over-count — safe for a zero-bounce gate.
+    """
+    comps = _parse_computations(text)
+    table: Dict[str, Dict[str, str]] = {
+        c: {i.name: i.shape for i in instrs} for c, instrs in comps.items()
+    }
+    real = [c for c in comps if c != "__entry__"]
+    tainted: Dict[str, set] = {c: set() for c in comps}
+    comp_dirty: Dict[str, bool] = {c: False for c in comps}
+
+    # parameter index -> instruction name, per computation
+    params_of: Dict[str, Dict[int, str]] = {}
+    for c in real:
+        d: Dict[int, str] = {}
+        for ins in comps[c]:
+            if ins.op == "parameter":
+                m = re.match(r"(\d+)\)", ins.rest)
+                if m:
+                    d[int(m.group(1))] = ins.name
+        params_of[c] = d
+
+    bounces = set()
+    changed = True
+    while changed:
+        changed = False
+        for c in real:
+            for ins in comps[c]:
+                if ins.name in tainted[c]:
+                    hit = True
+                else:
+                    hit = False
+                    # seed: dequantization of an int8 tensor
+                    if (ins.op == "convert"
+                            and _dtype_of(ins.shape) in _FLOAT_DTYPES):
+                        opshape = table[c].get(
+                            ins.operands[0]) if ins.operands else None
+                        if opshape is not None and _dtype_of(opshape) == "s8":
+                            hit = True
+                    # propagate: any tainted operand taints the result
+                    if not hit and any(o in tainted[c]
+                                       for o in ins.operands):
+                        hit = True
+                    # a callee holding tainted values taints the call site
+                    sub = _CALLS.search(ins.rest)
+                    if not hit and sub and comp_dirty.get(sub.group(1)):
+                        hit = True
+                    if hit:
+                        tainted[c].add(ins.name)
+                        comp_dirty[c] = True
+                        changed = True
+                # cross-computation: tainted operands taint callee params
+                sub = _CALLS.search(ins.rest)
+                if sub and sub.group(1) in params_of and any(
+                        o in tainted[c] for o in ins.operands):
+                    callee = sub.group(1)
+                    for pname in params_of[callee].values():
+                        if pname not in tainted[callee]:
+                            tainted[callee].add(pname)
+                            comp_dirty[callee] = True
+                            changed = True
+                if ins.op == "dot" and any(o in tainted[c]
+                                           for o in ins.operands):
+                    bounces.add((c, ins.name))
+    return len(bounces)
+
+
 def analyze_hlo(text: str) -> Dict[str, float]:
     comps = _parse_computations(text)
     table: Dict[str, Dict[str, str]] = {

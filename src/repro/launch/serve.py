@@ -25,6 +25,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--int8", action="store_true",
+                    help="end-to-end int8 decode: one-shot column-wise "
+                         "weight quantization, int8 GEMMs with scales "
+                         "re-applied in the fused epilogues (single-shard)")
     args = ap.parse_args()
 
     mesh = make_mesh(jax.device_count(), 1)
@@ -44,7 +48,8 @@ def main():
             key, (args.batch, cfg.enc_frames, cfg.d_model), jnp.float32)
 
     eng = ServeEngine(model, params,
-                      ServeConfig(max_new_tokens=args.max_new))
+                      ServeConfig(max_new_tokens=args.max_new,
+                                  int8=args.int8))
     t0 = time.time()
     out = eng.generate(batch, args.seed)
     dt = time.time() - t0

@@ -197,14 +197,24 @@ def project_qkv(params, x, cfg: ArchConfig, ctx: TPCtx):
         k = jnp.einsum("bsd,dn->bsn", x, params["wk"].astype(cd))
         v = jnp.einsum("bsd,dn->bsn", x, params["wv"].astype(cd))
     else:
-        w = params["wqkv"].astype(cd)
-        if ctx.model == 1:
-            # planned blocked GEMM, cast fused into the store phase
+        from repro.kernels.quantize import QuantizedWeight
+        w = params["wqkv"]
+        if isinstance(w, QuantizedWeight):
+            # int8 serving path (single-shard): the normed stream is
+            # rowwise-quantized, ONE int8 x int8 -> int32 GEMM covers all
+            # of Q/K/V (packed invariant preserved), and both scales come
+            # back inside the fused epilogue — the packed weight is never
+            # dequantized to fp
             from repro.kernels import ops as kops
             y = kops.matmul(x.reshape(b * s, -1), w,
                             out_dtype=cd).reshape(b, s, -1)
+        elif ctx.model == 1:
+            # planned blocked GEMM, cast fused into the store phase
+            from repro.kernels import ops as kops
+            y = kops.matmul(x.reshape(b * s, -1), w.astype(cd),
+                            out_dtype=cd).reshape(b, s, -1)
         else:
-            y = jnp.einsum("bsd,dn->bsn", x, w)
+            y = jnp.einsum("bsd,dn->bsn", x, w.astype(cd))
         q, k, v = split_packed_columns(y, qkv_sizes(cfg),
                                        qkv_packing(cfg))
     return (q.reshape(b, s, cfg.n_heads, cfg.hd),

@@ -267,11 +267,50 @@ def mlp_defs(d_model: int, d_ff: int, model: int, gated: bool, dtype: str,
     return defs
 
 
+def _mlp_apply_int8(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
+                    ctx: TPCtx, gated: bool) -> jnp.ndarray:
+    """Single-shard int8 MLP (the serving path, weights quantized
+    column-wise by ``Model.quantize_params_for_serving``).
+
+    ONE rowwise quantize of the normed stream feeds both the up and gate
+    int8 GEMMs (the broadcast input is quantized once, never per
+    consumer).  For the plain-GELU MLP the up GEMM's fused epilogue emits
+    the ``(q, scale)`` pair the down GEMM consumes DIRECTLY — a
+    GEMM -> GEMM int8 handoff whose int32 -> fp32 boundary lives entirely
+    inside the kernels' store phases (zero fp dequant -> requant bounce).
+    The gated MLP's two-operand ``silu(g) * u`` multiply runs in the
+    compute dtype and is requantized in the same fused elementwise chain.
+    """
+    assert ctx.model == 1, "int8 serving path is single-shard"
+    from repro.kernels import ops as kops
+    cd = ctx.compute_dtype
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    qx, sx = kops.quantize_rowwise(x2)
+    if gated:
+        h = kops.int8_matmul(qx, sx, *params["up"].as_matrix(),
+                             out_dtype=cd)
+        g = kops.int8_matmul(qx, sx, *params["gate"].as_matrix(),
+                             epilogue=Epilogue(activation="silu",
+                                               out_dtype=cd))
+        qh, sh = kops.quantize_rowwise(g * h)
+    else:
+        qh, sh = kops.int8_matmul(qx, sx, *params["up"].as_matrix(),
+                                  epilogue=Epilogue(activation="gelu",
+                                                    quantize=True))
+    out = kops.int8_matmul(qh, sh, *params["down"].as_matrix(),
+                           out_dtype=cd)
+    return out.reshape(*lead, -1)
+
+
 def mlp_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
               ctx: TPCtx, gated: bool) -> jnp.ndarray:
     """x: replicated-over-model activations [B, S, D] (already gathered if
     SP).  Returns activations matching the residual-stream sharding:
     seq-sharded under active SP, replicated otherwise."""
+    from repro.kernels.quantize import QuantizedWeight
+    if isinstance(params["up"], QuantizedWeight):
+        return _mlp_apply_int8(params, x, ctx, gated)
     model = ctx.model
     cd = ctx.compute_dtype
     up_cfg = XYZConfig(y=ctx.up_y, schedule=ctx.down_schedule, out_dtype=cd)

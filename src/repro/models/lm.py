@@ -166,6 +166,50 @@ class Model:
     def n_params(self) -> int:
         return pm.n_params(self.param_defs())
 
+    def quantize_params_for_serving(self, params: Dict[str, Any]
+                                    ) -> Dict[str, Any]:
+        """One-shot int8 weight quantization for serving (paper §IV-C1's
+        int8 pipeline applied to decode): every projection GEMM weight —
+        the packed ``wqkv``, the o-projection ``wo``, and the MLP
+        ``up``/``gate``/``down`` — becomes a ``QuantizedWeight`` (int8
+        values + per-output-column f32 scales, the ROADMAP column-wise
+        quantize).  Decode then runs int8 x int8 -> int32 GEMMs whose
+        epilogues re-apply the scales at the int32 -> fp32 boundary, so
+        consecutive GEMMs never bounce through a dequantized fp32 tensor
+        (guarded by ``launch.hlo_analysis.int8_bounce_count``).
+
+        Deliberately left at full precision: norms and embeddings (tiny,
+        gather-dominated), the vocab head (logit fidelity), recurrent
+        mixers (rglru/mlstm/slstm state math), MoE experts (routed einsum
+        path), cross-attention and the encoder stack (prefill-side,
+        different-input GEMMs), and legacy unpacked wq/wk/wv schemas.
+
+        Single-shard only (the multi-device decode path runs GSPMD
+        einsums); idempotent — already-quantized leaves pass through."""
+        from repro.kernels.quantize import (QuantizedWeight,
+                                            quantize_weight_colwise)
+        assert model_size(self.mesh) == 1, (
+            "int8 serving is single-shard: the model-parallel decode path "
+            "keeps full-precision GSPMD einsums")
+        moe = self.cfg.moe
+
+        def walk(tree: Any, path: str) -> Any:
+            if isinstance(tree, dict):
+                return {k: walk(v, f"{path}/{k}") for k, v in tree.items()}
+            if isinstance(tree, QuantizedWeight):
+                return tree
+            name = path.rsplit("/", 1)[-1]
+            if "/encoder/" in path or "/xattn/" in path:
+                return tree
+            if "/attn/" in path and name in ("wqkv", "wo"):
+                return quantize_weight_colwise(tree)
+            if "/ffn/" in path and not moe and name in ("up", "gate",
+                                                        "down"):
+                return quantize_weight_colwise(tree)
+            return tree
+
+        return walk(params, "")
+
     # -- blocks ---------------------------------------------------------------
 
     def _theta(self, btype: str) -> float:

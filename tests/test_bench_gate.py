@@ -1,0 +1,65 @@
+"""Unit tests for the CI benchmark-regression gate's comparison logic
+(scripts/bench_gate.py) — pure function, no timing involved."""
+import importlib.util
+import os
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load_gate():
+    spec = importlib.util.spec_from_file_location(
+        "bench_gate", os.path.join(_ROOT, "scripts", "bench_gate.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_identical_runs_pass():
+    g = _load_gate()
+    rows = {"a": 100.0, "b": 200.0, "c": 50.0}
+    failures, _ = g.compare(rows, dict(rows))
+    assert failures == []
+
+
+def test_uniform_host_slowdown_is_normalized_away():
+    """A runner uniformly 3x slower than the baseline host must NOT trip
+    the gate: the median-ratio normalization cancels host speed."""
+    g = _load_gate()
+    base = {"a": 100.0, "b": 200.0, "c": 50.0, "d": 75.0}
+    cur = {k: 3.0 * v for k, v in base.items()}
+    failures, _ = g.compare(cur, base)
+    assert failures == []
+
+
+def test_single_benchmark_regression_fails():
+    """One benchmark regressing 2x while its peers stay flat sticks out
+    of the normalized ratios and fails the gate."""
+    g = _load_gate()
+    base = {"a": 100.0, "b": 200.0, "c": 50.0, "d": 75.0}
+    cur = dict(base, a=2.0 * base["a"])
+    failures, _ = g.compare(cur, base)
+    assert len(failures) == 1 and "a" in failures[0]
+    assert "REGRESSION" in failures[0]
+
+
+def test_regression_within_tolerance_passes():
+    g = _load_gate()
+    base = {"a": 100.0, "b": 200.0, "c": 50.0, "d": 75.0}
+    cur = dict(base, a=1.2 * base["a"])  # +20% < default 25% tolerance
+    failures, _ = g.compare(cur, base)
+    assert failures == []
+
+
+def test_new_benchmark_passes_missing_fails():
+    g = _load_gate()
+    base = {"a": 100.0, "b": 200.0}
+    cur = {"a": 100.0, "new": 10.0}
+    failures, report = g.compare(cur, base)
+    assert any("MISSING benchmark b" in f for f in failures)
+    assert any(line.startswith("new  new:") for line in report)
+
+
+def test_no_common_benchmarks_fails():
+    g = _load_gate()
+    failures, _ = g.compare({"x": 1.0}, {"y": 2.0})
+    assert failures

@@ -1,0 +1,349 @@
+"""End-to-end int8 serving path.
+
+Covers the four layers of the quantized decode stack:
+  * kernel: the int8 x int8 -> int32 Pallas GEMM with row/col scales
+    folded into the fused epilogue, against the jnp oracle;
+  * weight pass: ``Model.quantize_params_for_serving`` (column-wise
+    scales, the ROADMAP column-wise quantize) — coverage, skips,
+    idempotence;
+  * numerics: int8 decode against the f64-referenced consistency-budget
+    machinery from PR 2, under the documented WIDER int8 budget (see
+    ``test_int8_decode_consistency``);
+  * HLO: ``int8_bounce_count == 0`` (no fp32 dequant -> requant between
+    GEMMs), single packed-QKV GEMM dispatch preserved, and a regression
+    proof that a deliberately-bounced fp32 layer trips the detector.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.kernels.epilogue import Epilogue
+from repro.kernels.quantize import QuantizedWeight, quantize_weight_colwise
+from repro.launch.hlo_analysis import (
+    gemm_dispatches,
+    int8_bounce_count,
+    weight_concat_count,
+)
+from repro.launch.mesh import make_mesh
+from repro.models.lm import Model
+
+SEQ = 32
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh(1, 1)
+
+
+# ---------------------------------------------------------------------------
+# kernel: int8 GEMM with scales in the fused epilogue
+# ---------------------------------------------------------------------------
+
+_EPS = [
+    None,
+    Epilogue(bias=True, activation="gelu", out_dtype=jnp.bfloat16),
+    Epilogue(activation="silu", out_dtype=jnp.bfloat16),
+    Epilogue(quantize=True),                        # rowwise (q, scale)
+    Epilogue(quantize=True, quantize_axis="col"),   # colwise (weight-grad)
+]
+
+
+@pytest.mark.parametrize("mkn", [(8, 16, 8), (33, 70, 52), (1, 128, 64),
+                                 (100, 130, 70)])
+@pytest.mark.parametrize("ep", _EPS,
+                         ids=["id", "bias_gelu", "silu", "qrow", "qcol"])
+def test_int8_matmul_interpret_matches_ref(mkn, ep):
+    m, k, n = mkn
+    ka, kb, kc = jax.random.split(jax.random.PRNGKey(m + n), 3)
+    a = jax.random.normal(ka, (m, k), jnp.float32)
+    w = jax.random.normal(kb, (k, n), jnp.float32)
+    bias = jax.random.normal(kc, (n,), jnp.float32)
+    qa, sa = ref.quantize_rowwise_ref(a)
+    qb, sb = ref.quantize_colwise_ref(w)
+    kwargs = dict(bias=bias) if (ep is not None and ep.bias) else {}
+    want = ops.int8_matmul(qa, sa, qb, sb, mode="xla", epilogue=ep,
+                           **kwargs)
+    got = ops.int8_matmul(qa, sa, qb, sb, mode="interpret",
+                          block=(16, 16, 16), epilogue=ep, **kwargs)
+    if isinstance(want, tuple):
+        for g, wnt in zip(got, want):
+            assert g.shape == wnt.shape and g.dtype == wnt.dtype
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(wnt, np.float32),
+                                       rtol=1e-5, atol=1e-5)
+    else:
+        assert got.dtype == want.dtype
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_int8_matmul_accuracy_vs_float():
+    """The full quantize -> int8 GEMM -> rescale pipeline sits within int8
+    noise of the float product (paper §IV-C1 pipeline)."""
+    a = jax.random.normal(jax.random.PRNGKey(0), (64, 128), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (128, 96), jnp.float32)
+    qw = quantize_weight_colwise(w)
+    got = np.asarray(ops.matmul(a, qw, mode="xla"))
+    want = np.asarray(a @ w)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.03, rel
+
+
+def test_quantize_colwise_matches_transposed_rowwise():
+    w = jax.random.normal(jax.random.PRNGKey(2), (70, 52), jnp.float32)
+    q, s = ops.quantize_colwise(w, mode="interpret")
+    qt, st = ref.quantize_rowwise_ref(w.T)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qt.T))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(st.reshape(1, -1)),
+                               rtol=1e-6)
+    # per-column round-trip bound
+    back = np.asarray(q, np.float32) * np.asarray(s)
+    absmax = np.max(np.abs(np.asarray(w)), axis=0, keepdims=True)
+    assert np.all(np.abs(back - np.asarray(w)) <= absmax / 127.0 + 1e-6)
+
+
+def test_quantized_weight_stacked_leading_axes():
+    """Group-stacked weights ([G, K, N]) quantize with lockstep leading
+    axes on q and scale, so a lax.scan slices both together."""
+    w = jax.random.normal(jax.random.PRNGKey(3), (3, 16, 24), jnp.float32)
+    qw = quantize_weight_colwise(w)
+    assert qw.q.shape == (3, 16, 24) and qw.scale.shape == (3, 1, 24)
+    leaves, treedef = jax.tree_util.tree_flatten(qw)
+    assert len(leaves) == 2  # registered pytree: jit/scan can carry it
+    one = jax.tree_util.tree_unflatten(
+        treedef, [l[1] for l in leaves])
+    got, want = one.as_matrix(), quantize_weight_colwise(w[1]).as_matrix()
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]))
+
+
+# ---------------------------------------------------------------------------
+# the one-shot serving weight-quantization pass
+# ---------------------------------------------------------------------------
+
+def _quantized_paths(tree, path=""):
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out += _quantized_paths(v, f"{path}/{k}")
+    elif isinstance(tree, QuantizedWeight):
+        out.append(path)
+    return out
+
+
+def test_quantize_pass_coverage_and_skips(mesh):
+    cfg = get_config("whisper-small", smoke=True)
+    model = Model(cfg, mesh)
+    params = model.init_params(0)
+    qparams = model.quantize_params_for_serving(params)
+    paths = _quantized_paths(qparams)
+    # decoder-stack projections are quantized ...
+    assert any("/attn/wqkv" in p for p in paths)
+    assert any("/attn/wo" in p for p in paths)
+    assert any("/ffn/up" in p for p in paths)
+    # ... while embeddings, norms, cross-attention and the encoder stay fp
+    assert not any("/xattn/" in p for p in paths)
+    assert not any("/encoder/" in p for p in paths)
+    assert not isinstance(qparams["embed"], QuantizedWeight)
+    assert not isinstance(qparams["final_norm"], QuantizedWeight)
+    # idempotent: a second pass is a no-op
+    q2 = model.quantize_params_for_serving(qparams)
+    assert _quantized_paths(q2) == paths
+
+
+# ---------------------------------------------------------------------------
+# numerics: int8 decode vs the f64-referenced budget (PR 2 machinery)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["internlm2-1.8b", "whisper-small"])
+def test_int8_decode_consistency(arch, mesh):
+    """Int8 decode against the f64 reference, under the int8 budget.
+
+    Budget policy (the int8 extension of PR 2's, recorded in ROADMAP):
+    the f64 reference stays the FULL-PRECISION model — quantization error
+    is part of the measured path, not the reference — and the reference
+    noise becomes the int8 *teacher-forced forward* error ``err_fwd8``
+    (the same quantized GEMM chain run without a cache).  Decode must
+    land within 4x that, plus the fp32-ulp floor: identical structure to
+    the fp32 policy, with the quantization noise measured rather than
+    hand-tuned.  The absolute sanity bound is WIDER than fp32's
+    (err_fwd8 < 5% of logit scale vs the fp path's rounding-level error):
+    that 1-2% is the int8 pipeline's real, irreducible quantization
+    noise."""
+    from test_archs_smoke import _batch, f64_reference_logits
+    from repro.models.loss import vocab_parallel_logits
+
+    cfg = get_config(arch, smoke=True)
+    model = Model(cfg, mesh)
+    params = model.init_params(0)
+    qparams = model.quantize_params_for_serving(params)
+    batch = _batch(cfg)
+
+    logits_p, cache = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len=SEQ + 8))(qparams, batch)
+    tok = jnp.argmax(logits_p[:, :cfg.vocab], axis=-1)[:, None] \
+        .astype(jnp.int32)
+    logits_d, _ = jax.jit(model.decode_step)(
+        qparams, cache, tok, jnp.asarray(SEQ, jnp.int32))
+    assert bool(jnp.all(jnp.isfinite(logits_d)))
+
+    full = jnp.concatenate([batch["tokens"], tok], axis=1)
+    fbatch = dict(batch, tokens=full)
+    h8, _, _ = jax.jit(lambda p, b: model.forward(p, b, mode="train"))(
+        qparams, fbatch)
+    ref8 = vocab_parallel_logits(h8[:, -1:], model.head_weights(qparams),
+                                 model.ctx, cfg.final_softcap)[:, 0]
+    ref64 = f64_reference_logits(cfg, params, fbatch, mesh)
+
+    scale = max(1.0, float(np.max(np.abs(ref64))))
+    err_fwd8 = float(np.max(np.abs(np.asarray(ref8, np.float64) - ref64)))
+    err_dec8 = float(np.max(np.abs(np.asarray(logits_d, np.float64)
+                                   - ref64)))
+    # the quantized pipeline itself must sit within int8 noise of f64
+    assert err_fwd8 < 0.05 * scale, (err_fwd8, scale)
+    budget = 4.0 * err_fwd8 + 64 * np.finfo(np.float32).eps * scale
+    assert err_dec8 <= budget, (
+        f"int8 decode drifted from the f64 reference: "
+        f"err_dec8={err_dec8:.3e} > budget={budget:.3e} "
+        f"(err_fwd8={err_fwd8:.3e})")
+
+
+# ---------------------------------------------------------------------------
+# HLO guards: zero fp32 bounces, packed-QKV invariant preserved
+# ---------------------------------------------------------------------------
+
+def _int8_decode_hlo(cfg, mesh):
+    model = Model(cfg, mesh)
+    qparams = model.quantize_params_for_serving(model.init_params(0))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32)}
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, max_len=24))(
+        qparams, batch)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.asarray(16, jnp.int32)
+    fn = jax.jit(model.decode_step)
+    return fn.lower(qparams, cache, tok, pos).compile().as_text(), model
+
+
+def test_int8_decode_hlo_no_bounce_single_qkv_dispatch(mesh):
+    """Acceptance: traced int8 decode HLO has ZERO fp32 dequant->requant
+    round trips between GEMMs, exactly one packed-QKV GEMM dispatch per
+    traced attention apply (the scanned group body appears once), and no
+    apply-time weight-shard concatenate."""
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    # keep the packed-QKV width unique in the module (the smoke config's
+    # d_ff collides with q_dim + 2*kv_dim, which would overcount dots)
+    cfg = dataclasses.replace(cfg, d_ff=96)
+    packed_cols = cfg.q_dim + 2 * cfg.kv_dim
+    assert packed_cols not in (cfg.d_model, cfg.d_ff, cfg.padded_vocab())
+
+    hlo, model = _int8_decode_hlo(cfg, mesh)
+    assert int8_bounce_count(hlo) == 0
+    # layers run as a scanned group: the body (and its single QKV dot) is
+    # traced ONCE for the whole stack
+    assert gemm_dispatches(hlo, packed_cols) == 1
+    assert weight_concat_count(hlo, cfg.d_model) == 0
+
+
+def test_int8_prefill_hlo_has_no_bounce(mesh):
+    """Prefill shares the quantized weights; it must not bounce either."""
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              d_ff=96)
+    model = Model(cfg, mesh)
+    qparams = model.quantize_params_for_serving(model.init_params(0))
+    batch = {"tokens": jnp.zeros((2, 16), jnp.int32)}
+    fn = jax.jit(lambda p, b: model.prefill(p, b, max_len=24))
+    hlo = fn.lower(qparams, batch).compile().as_text()
+    assert int8_bounce_count(hlo) == 0
+
+
+def test_bounce_detector_trips_on_deliberate_bounce():
+    """Regression guard: the naive implementation — dequantize the int8
+    activations to fp32, run a float GEMM, requantize — produces exactly
+    the dequant-feeds-a-dot HLO signature the detector counts."""
+    def bounced(qx, sx, w):
+        x = ops.dequantize_rowwise(qx, sx)          # s8 -> f32 bounce
+        y = x @ w                                   # fp32 GEMM consumes it
+        return ref.quantize_rowwise_ref(y)          # ... and requantizes
+
+    qx = jnp.ones((4, 64), jnp.int8)
+    sx = jnp.ones((4, 1), jnp.float32)
+    w = jnp.ones((64, 32), jnp.float32)
+    hlo = jax.jit(bounced).lower(qx, sx, w).compile().as_text()
+    assert int8_bounce_count(hlo) >= 1
+
+    # the clean pipeline over the same operands reports zero
+    def clean(qx, sx, w):
+        qw = quantize_weight_colwise(w)
+        return ops.int8_matmul(qx, sx, *qw.as_matrix(), mode="xla",
+                               epilogue=Epilogue(quantize=True))
+    hlo2 = jax.jit(clean).lower(qx, sx, w).compile().as_text()
+    assert int8_bounce_count(hlo2) == 0
+
+
+# ---------------------------------------------------------------------------
+# serving engine integration
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_int8_from_checkpoint(tmp_path, mesh):
+    """from_checkpoint + ServeConfig(int8=True): restore fp weights, run
+    the one-shot quantization pass, generate."""
+    from repro.checkpoint import CheckpointManager
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = Model(cfg, mesh)
+    params = model.init_params(0)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, params, blocking=True)
+
+    eng = ServeEngine.from_checkpoint(
+        model, str(tmp_path), scfg=ServeConfig(max_new_tokens=4,
+                                               int8=True))
+    assert any(_quantized_paths(eng.params))
+    prompt = {"tokens": (jnp.arange(2 * 16, dtype=jnp.int32)
+                         .reshape(2, 16) % cfg.vocab)}
+    out = eng.generate(prompt)
+    assert out.shape == (2, 4)
+    assert np.all((out >= 0) & (out < cfg.vocab))
+
+    # greedy int8 decode agrees with the fp engine on this tiny model
+    fp = ServeEngine(model, params, ServeConfig(max_new_tokens=4))
+    np.testing.assert_array_equal(out, fp.generate(prompt))
+
+
+# ---------------------------------------------------------------------------
+# precision-aware planner / perf-model costs
+# ---------------------------------------------------------------------------
+
+def test_int8_cost_models():
+    from repro.core.perf_model import (gemm_arithmetic_intensity,
+                                       int8_serving_savings)
+    from repro.core.planner import int8_gemm_hbm_bytes, plan_tpu_block, \
+        plan_tpu_shard
+
+    m, k, n = 128, 2048, 8192
+    assert int8_gemm_hbm_bytes(m, k, n, fused=True) < \
+        int8_gemm_hbm_bytes(m, k, n, fused=False)
+    sav = int8_serving_savings(m, k, n)
+    # deleting the dequant round trips buys > 4x HBM bytes on a
+    # weight-dominated decode GEMM
+    assert sav["hbm_speedup"] > 4.0
+    assert sav["compute_speedup"] >= 4.0
+    ai8 = gemm_arithmetic_intensity(m, k, n, "int8", out_itemsize=1)
+    assert ai8 > gemm_arithmetic_intensity(m, k, n, "bf16")
+    assert ai8 > gemm_arithmetic_intensity(m, k, n, "fp32")
+
+    blk = plan_tpu_block(512, 2048, 8192, "int8")
+    assert blk.bm % 8 == 0 and blk.bk % 128 == 0 and blk.bn % 128 == 0
+    # schedule choice is precision-aware: both precisions produce a valid
+    # plan over the same mesh, with the int8 plan seeing 4x the intensity
+    p8 = plan_tpu_shard(m, k, n, "int8", {"data": 1, "model": 4})
+    pf = plan_tpu_shard(m, k, n, "fp32", {"data": 1, "model": 4})
+    assert p8.est_hbm_s < pf.est_hbm_s
+    assert p8.y_shards * p8.z_shards == 4

@@ -144,6 +144,26 @@ def _check_quantize_roundtrip(m, n, seed, scale):
     assert np.all(np.abs(np.asarray(back) - np.asarray(x)) <= bound + 1e-5)
 
 
+def _check_quantize_pallas_props(m, n, block_rows, seed):
+    """quantize_rowwise_pallas properties over awkward shapes: zero rows,
+    a single row, block_rows not dividing M (the padding path) — the
+    kernel must match the oracle exactly and the per-row round-trip error
+    must stay within absmax/127."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (m, n),
+                          jnp.float32) * 3.0
+    q, s = quantize_rowwise_pallas(x, block_rows=block_rows,
+                                   interpret=True)
+    assert q.shape == (m, n) and q.dtype == jnp.int8
+    assert s.shape == (m, 1) and s.dtype == jnp.float32
+    qr, sr = ref.quantize_rowwise_ref(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    back = np.asarray(q, np.float32) * np.asarray(s)
+    absmax = np.max(np.abs(np.asarray(x)), axis=1, keepdims=True) \
+        if m else np.zeros((0, 1), np.float32)
+    assert np.all(np.abs(back - np.asarray(x)) <= absmax / 127.0 + 1e-6)
+
+
 if HAVE_HYPOTHESIS:
     @settings(max_examples=20, deadline=None)
     @given(
@@ -165,6 +185,13 @@ if HAVE_HYPOTHESIS:
     def test_quantize_roundtrip_error_bound(m, n, seed, scale):
         _check_quantize_roundtrip(m, n, seed, scale)
 
+    @settings(max_examples=20, deadline=None)
+    @given(m=st.integers(0, 48), n=st.integers(1, 96),
+           block_rows=st.sampled_from([8, 32, 256]),
+           seed=st.integers(0, 2 ** 16))
+    def test_quantize_pallas_properties(m, n, block_rows, seed):
+        _check_quantize_pallas_props(m, n, block_rows, seed)
+
 
 @pytest.mark.parametrize("m,k,n,seed", [(1, 1, 1, 0), (8, 16, 4, 1),
                                         (33, 7, 20, 2), (64, 64, 64, 3)])
@@ -182,6 +209,16 @@ def test_addertree_sequential_smoke(s, m, n, seed):
                                             (32, 128, 2, 1e3)])
 def test_quantize_roundtrip_smoke(m, n, seed, scale):
     _check_quantize_roundtrip(m, n, seed, scale)
+
+
+@pytest.mark.parametrize("m,n,block_rows,seed", [
+    (0, 8, 32, 0),      # zero rows: empty result, no 0-length grid
+    (1, 64, 256, 1),    # single row, block larger than M
+    (100, 33, 32, 2),   # block_rows does not divide M (padding path)
+    (64, 16, 8, 3),     # exact multiple
+])
+def test_quantize_pallas_props_smoke(m, n, block_rows, seed):
+    _check_quantize_pallas_props(m, n, block_rows, seed)
 
 
 def test_quantized_matmul_close_to_float():
