@@ -9,11 +9,15 @@ compiles natively on TPU):
    device memory, then a separately jitted elementwise epilogue).  The
    derived column reports the perf_model's predicted HBM-byte savings.
 
-2. ring_overlap/*: the overlapped collective matmul ('ring' schedule) vs
-   the barrier reduce_scatter on an 8-device CPU mesh, run in a
-   subprocess so this process keeps a single device.  The subprocess also
-   asserts the two schedules agree BIT-FOR-BIT at fp32 (the determinism
-   guarantee of the shared chunk-GEMM structure).
+2. ring_overlap/* + bidir_ring/* + gather_overlap/*: the overlapped
+   collective matmuls ('ring' and the bidirectional 'bidir_ring') vs the
+   barrier reduce_scatter on an 8-device CPU mesh, plus the ksharded
+   Z>1 cells whose barrier all-gather of A became a chunked ppermute
+   gather — all run in a subprocess so this process keeps a single
+   device.  The subprocess also asserts every schedule agrees
+   BIT-FOR-BIT at fp32 with reduce_scatter (the determinism guarantee of
+   the shared chunk-GEMM structure); the bidir derived column reports
+   the perf model's per-link byte ratio (~0.5 vs 'ring').
 
 Run directly for a human-readable report:
 
@@ -129,36 +133,71 @@ _RING_SUBPROC = r"""
 import time
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.maxeva_matmul import XYZConfig, shard_weight_xyz, xyz_matmul
+from repro.core.perf_model import collective_overlap_savings
 from repro.core.sharding import use_mesh
 from repro.launch.mesh import make_mesh
 
 mesh = make_mesh(2, 4)
 MODEL = 4
 
+def time_interleaved(fns, x, iters=7):
+    # interleaved min-of-N (noisy shared host)
+    times = {name: float("inf") for name in fns}
+    for _ in range(iters):
+        for name, f in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(x))
+            times[name] = min(times[name], (time.perf_counter() - t0) * 1e6)
+    return times
+
 def bench(m, k, n, y):
     kx, kw = jax.random.split(jax.random.PRNGKey(0))
     x = jax.random.normal(kx, (8, m // 8, k), jnp.float32)
     w = jax.random.normal(kw, (k, n), jnp.float32) / np.sqrt(k)
     w_xyz = shard_weight_xyz(w, MODEL, y)
-    outs, times, fns = {}, {}, {}
-    for sched in ("reduce_scatter", "ring"):
+    fns, gfns = {}, {}
+    for sched in ("reduce_scatter", "ring", "bidir_ring"):
         cfg = XYZConfig(y=y, schedule=sched)
         fns[sched] = jax.jit(
             lambda xx, cfg=cfg: xyz_matmul(xx, w_xyz, mesh=mesh, cfg=cfg))
-        times[sched] = float("inf")
+    if y == 2:
+        # Z = 2: the ksharded overlapped-gather path (chunked ppermute
+        # gather of A interleaved with the K-piece GEMMs)
+        for sched in ("reduce_scatter", "bidir_ring"):
+            cfg = XYZConfig(y=y, schedule=sched, x_layout="ksharded")
+            gfns[sched] = jax.jit(
+                lambda xx, cfg=cfg: xyz_matmul(xx, w_xyz, mesh=mesh,
+                                               cfg=cfg))
+    outs, gouts = {}, {}
     with use_mesh(mesh):
-        for sched, f in fns.items():
-            outs[sched] = np.asarray(f(x))  # compile + warm
-        for _ in range(7):  # interleaved min-of-N (noisy shared host)
-            for sched, f in fns.items():
-                t0 = time.perf_counter()
-                jax.block_until_ready(f(x))
-                times[sched] = min(times[sched],
-                                   (time.perf_counter() - t0) * 1e6)
-    bitwise = np.array_equal(outs["ring"], outs["reduce_scatter"])
-    assert bitwise, f"ring != reduce_scatter bitwise at fp32 ({m}x{k}x{n} y={y})"
-    print(f"RING,{m}x{k}x{n}/y{y},{times['ring']:.2f},"
-          f"rs_us={times['reduce_scatter']:.2f};bitwise_fp32={bitwise}")
+        for name, f in fns.items():
+            outs[name] = np.asarray(f(x))   # compile + warm
+        for name, f in gfns.items():
+            gouts[name] = np.asarray(f(x))
+        times = time_interleaved(fns, x)
+        gtimes = time_interleaved(gfns, x) if gfns else {}
+    # the cross-schedule BITWISE determinism invariant, proven on every
+    # bench-gate run (not only in the test suite)
+    for sched in ("ring", "bidir_ring"):
+        bitwise = np.array_equal(outs[sched], outs["reduce_scatter"])
+        assert bitwise, (
+            f"{sched} != reduce_scatter bitwise at fp32 ({m}x{k}x{n} y={y})")
+    sav = collective_overlap_savings(m // 2, n // (MODEL // y), y)
+    print(f"ROW,ring_overlap/{m}x{k}x{n}/y{y},{times['ring']:.2f},"
+          f"rs_us={times['reduce_scatter']:.2f};bitwise_fp32=True")
+    print(f"ROW,bidir_ring/{m}x{k}x{n}/y{y},{times['bidir_ring']:.2f},"
+          f"rs_us={times['reduce_scatter']:.2f};"
+          f"ring_us={times['ring']:.2f};bitwise_fp32=True;"
+          f"model_link_ratio={sav['bidir_link_ratio']:.2f}")
+    if gfns:
+        bitwise = np.array_equal(gouts["bidir_ring"],
+                                 gouts["reduce_scatter"])
+        assert bitwise, (
+            f"overlapped-gather bidir_ring != reduce_scatter bitwise "
+            f"({m}x{k}x{n} y={y})")
+        print(f"ROW,gather_overlap/{m}x{k}x{n}/y{y},"
+              f"{gtimes['bidir_ring']:.2f},"
+              f"rs_us={gtimes['reduce_scatter']:.2f};bitwise_fp32=True")
 
 for (m, k, n) in [(512, 512, 512), (1024, 1024, 1024), (2048, 2048, 2048),
                   (4096, 512, 4096)]:
@@ -169,20 +208,25 @@ print("RING_OK")
 
 
 def ring_overlap_rows():
+    """Collective-matmul rows ('ring', 'bidir_ring', ksharded
+    'gather_overlap') from an 8-device subprocess.  The subprocess
+    ASSERTS the cross-schedule bitwise-fp32 determinism invariant for
+    every row — scripts/bench_gate.py runs this on every CI pass, so the
+    invariant is proven on every run, not just under pytest."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(_ROOT, "src")
     env.setdefault("JAX_PLATFORMS", "cpu")
     r = subprocess.run([sys.executable, "-c", _RING_SUBPROC],
-                       capture_output=True, text=True, timeout=1200,
+                       capture_output=True, text=True, timeout=1800,
                        env=env)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert "RING_OK" in r.stdout
     out = []
     for line in r.stdout.splitlines():
-        if line.startswith("RING,"):
+        if line.startswith("ROW,"):
             _, name, us, derived = line.split(",", 3)
-            out.append((f"ring_overlap/{name}", float(us), derived))
+            out.append((name, float(us), derived))
     return out
 
 

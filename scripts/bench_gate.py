@@ -60,8 +60,9 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
     # cross-run noise control is the normalized-ratio comparison)
     rows += fused_epilogue.fused_vs_unfused_rows(passes=1)
     # ring_overlap_rows asserts the cross-schedule BITWISE determinism
-    # guarantee inside its subprocess (RING_OK) — a hard correctness
-    # check the gate must keep running, timing aside
+    # guarantee inside its subprocess (RING_OK) for 'ring', 'bidir_ring'
+    # AND the ksharded overlapped-gather path — a hard correctness check
+    # the gate must keep running, timing aside
     rows += fused_epilogue.ring_overlap_rows()
     rows += tpu_matmul.rows()
     rows += int8_decode.rows()

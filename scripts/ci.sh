@@ -50,13 +50,21 @@ tier1() {
 }
 
 multidev() {
-    # fake-multidevice job: the sharded paths (xyz schedules, ring
-    # collective, fused-SP packed QKV, epilogues, grads) must pass on
-    # every PR.  Runs in its own process so the tier-1 suite keeps a
-    # single jax device.
+    # fake-multidevice job: the sharded paths (xyz schedules, ring/bidir
+    # collectives, overlapped gather, fused-SP packed QKV, epilogues,
+    # grads) must pass on every PR.  Runs in its own process so the
+    # tier-1 suite keeps a single jax device.
     JAX_PLATFORMS=cpu XLA_FLAGS="--xla_force_host_platform_device_count=8" \
         PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python tests/_multidev_checks.py
+    # full schedule-equivalence property grid (multidev-marked, skipped
+    # in tier-1): -v surfaces every per-cell check name for triage, and
+    # each test's stdout carries the subprocess's ok equiv[...] lines.
+    # The pytest parent process stays single-device: the 8-device flag is
+    # set only inside the sweep subprocesses (dry-run isolation rule).
+    REPRO_MULTIDEV=1 JAX_PLATFORMS=cpu \
+        PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -m multidev -v -rA tests/test_schedule_equivalence.py
 }
 
 bench() {

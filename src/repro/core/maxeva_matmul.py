@@ -39,13 +39,38 @@ Reduction schedules (placement-pattern analogues, §IV-D):
                       GEMM, so XLA's latency-hiding scheduler overlaps
                       compute with communication (§IV-C ping-pong applied
                       to the wire).
+  'bidir_ring'      — the overlapped ring with each N-chunk split into two
+                      half-chunks shipped by two OPPOSITE rotation ppermute
+                      sets.  Total wire bytes equal 'ring', but each
+                      direction's links carry half of them, so on a
+                      full-duplex torus the wire time halves (the per-link
+                      traffic-balancing lesson of the Versal GEMM energy
+                      study applied to the ICI ring).
 
-Determinism guarantee: all y>1 schedules build their local partial from
-the SAME per-N-chunk GEMMs and reduce contributions in ascending
-y-position order, so the schedule choice never changes numerics — 'ring'
-matches 'reduce_scatter' bit-for-bit at fp32, and the planner is free to
-switch schedules step-to-step (the placement-pattern analogue: P1 and P2
-compute identical results).
+Determinism contract (extends across ALL FOUR schedules): every y>1
+schedule builds its local partial from the SAME per-N-chunk GEMMs (the
+shared ``chunk_fn``) and reduces contributions in ascending y-position
+order, so the schedule choice never changes numerics — 'ring' and
+'bidir_ring' match 'reduce_scatter' bit-for-bit at fp32 (the split-chunk
+merge concatenates the rank-order-reduced half-chunk buffers, an
+elementwise-identical association), and the planner is free to switch
+schedules step-to-step (the placement-pattern analogue: P1 and P2 compute
+identical results).  ``tests/test_schedule_equivalence.py`` sweeps the
+full (schedule x x_layout x Y x Z x epilogue) grid and asserts it.
+
+Overlapped all-gather (``x_layout='ksharded'``, Z > 1, Y > 1): instead of
+a barrier ``all_gather`` of A before the local GEMM, the gather is
+CHUNKED — each z-subgroup peer's K-piece arrives by its own rotation
+ppermute and is consumed immediately by that piece's GEMM against the
+matching weight row-block, so the gather hops hide behind the MXU work
+(GotoBLAS2-on-Versal packing/compute overlap applied to the gather side).
+The per-piece products are reduced in ascending global K-piece order at
+fp32 by EVERY schedule on this path, which keeps the cross-schedule
+bitwise contract intact (the K-piece association differs from the
+monolithic-GEMM accumulation of the replicated path, so 'ksharded' Z>1
+numerics are layout-specific but schedule-independent).  The Y == 1 path
+keeps the barrier gather: there is no chunk GEMM to overlap with, and the
+whole epilogue stays fused in the kernel's store phase.
 
 Fused epilogues: ``XYZConfig.epilogue`` (a ``kernels.epilogue.Epilogue``)
 runs bias/activation/residual/cast/quantize on the GEMM output without an
@@ -71,15 +96,32 @@ from repro.kernels import ops as kops
 from repro.kernels.epilogue import Epilogue, apply_epilogue
 
 
+SCHEDULES = ("allreduce", "reduce_scatter", "ring", "bidir_ring")
+X_LAYOUTS = ("replicated", "ksharded")
+
+
 @dataclasses.dataclass(frozen=True)
 class XYZConfig:
     """Per-GEMM plan consumed by ``xyz_matmul``."""
 
     y: int = 1                        # K shards (adder-tree width)
-    schedule: str = "reduce_scatter"  # 'allreduce' | 'reduce_scatter' | 'ring'
+    schedule: str = "reduce_scatter"  # one of SCHEDULES
     x_layout: str = "replicated"      # 'replicated' (broadcast) | 'ksharded'
     out_dtype: Optional[jnp.dtype] = None
     epilogue: Optional[Epilogue] = None   # fused store-phase epilogue
+
+    def __post_init__(self):
+        # fail LOUDLY on typos ('ring ' / 'reduce-scatter' / ...): an
+        # unknown string silently running some default schedule is exactly
+        # the failure mode the determinism contract exists to prevent.
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; valid schedules are "
+                f"{SCHEDULES}")
+        if self.x_layout not in X_LAYOUTS:
+            raise ValueError(
+                f"unknown x_layout {self.x_layout!r}; valid layouts are "
+                f"{X_LAYOUTS}")
 
     def z(self, model: int) -> int:
         assert model % self.y == 0, (model, self.y)
@@ -159,19 +201,16 @@ def _chunk_gemm(x2: jnp.ndarray, wl: jnp.ndarray, c, chunk: int,
     return kops.matmul(x2, wc, out_dtype=wire_dtype)
 
 
-def _partial_chunks(x2: jnp.ndarray, wl: jnp.ndarray, y: int,
-                    wire_dtype) -> jnp.ndarray:
+def _partial_from_chunks(chunk_fn, y: int) -> jnp.ndarray:
     """The local partial as a concat of per-N-chunk GEMMs — the SAME chunk
-    GEMMs the 'ring' schedule issues, so every schedule sees bitwise
+    GEMMs the ring schedules issue, so every schedule sees bitwise
     identical local contributions (cross-schedule determinism)."""
-    nz = wl.shape[-1]
-    chunk = nz // y
-    parts = [_chunk_gemm(x2, wl, c, chunk, wire_dtype) for c in range(y)]
-    return jnp.concatenate(parts, axis=-1)
+    return jnp.concatenate([chunk_fn(c) for c in range(y)], axis=-1)
 
 
 def _rotation_pairs(groups, y: int, s: int):
-    """ppermute pairs rotating each y-subgroup by ``s`` positions."""
+    """ppermute pairs rotating each subgroup by ``s`` positions (``s`` may
+    be negative: the opposite ring direction)."""
     if groups is None:
         return [(i, (i + s) % y) for i in range(y)]
     pairs = []
@@ -181,8 +220,19 @@ def _rotation_pairs(groups, y: int, s: int):
     return pairs
 
 
-def _ring_collective_matmul(x2: jnp.ndarray, wl: jnp.ndarray, axis: str,
-                            groups, y: int, wire_dtype) -> jnp.ndarray:
+def _rank_order_sum(buf: jnp.ndarray, wire_dtype) -> jnp.ndarray:
+    """Reduce stacked contributions over axis 0 in ascending rank order at
+    fp32 — the association XLA's reduce-scatter uses, shared by every
+    schedule so the reduction never depends on the wire pattern."""
+    acc = buf[0].astype(jnp.float32)
+    for i in range(1, buf.shape[0]):
+        acc = acc + buf[i].astype(jnp.float32)
+    return acc.astype(wire_dtype)
+
+
+def _ring_collective_matmul(chunk_fn, yid, axis: str, groups, y: int,
+                            rows: int, chunk: int,
+                            wire_dtype) -> jnp.ndarray:
     """Overlapped collective matmul (the 'ring' schedule).
 
     The local [rows, Nz] GEMM is split into Y N-chunks.  In round ``s``
@@ -196,34 +246,123 @@ def _ring_collective_matmul(x2: jnp.ndarray, wl: jnp.ndarray, axis: str,
     The owner buffers contributions by source y-position and reduces in
     ascending rank order — the association XLA's reduce-scatter uses — so
     the result matches 'reduce_scatter' bit-for-bit at fp32.
-    """
-    md = jax.lax.axis_index(axis)
-    yid = jax.lax.rem(md, y)
-    rows = x2.shape[0]
-    nz = wl.shape[-1]
-    assert nz % y == 0, (nz, y)
-    chunk = nz // y
 
+    ``chunk_fn(c) -> [rows, chunk]`` is the SHARED per-N-chunk GEMM (or a
+    slice of the shared gather-overlap partial on the ksharded path); ``c``
+    may be traced.
+    """
     buf = jnp.zeros((y, rows, chunk), wire_dtype)
     # own contribution to the chunk this device keeps (no hop)
-    buf = jax.lax.dynamic_update_index_in_dim(
-        buf, _chunk_gemm(x2, wl, yid, chunk, wire_dtype), yid, 0)
-    send = _chunk_gemm(x2, wl, jax.lax.rem(yid + 1, y), chunk, wire_dtype)
+    buf = jax.lax.dynamic_update_index_in_dim(buf, chunk_fn(yid), yid, 0)
+    send = chunk_fn(jax.lax.rem(yid + 1, y))
     for s in range(1, y):
         recv = jax.lax.ppermute(send, axis, _rotation_pairs(groups, y, s))
         if s + 1 < y:
             # issue round s+1's GEMM before consuming round s's hop: the
             # chunk GEMM has no data dependence on the in-flight permute
-            send = _chunk_gemm(x2, wl, jax.lax.rem(yid + s + 1, y), chunk,
-                               wire_dtype)
+            send = chunk_fn(jax.lax.rem(yid + s + 1, y))
         buf = jax.lax.dynamic_update_index_in_dim(
             buf, recv, jax.lax.rem(yid - s + y, y), 0)
+    return _rank_order_sum(buf, wire_dtype)
 
-    # rank-order reduction over source y-positions (fp32, like XLA's RS)
-    acc = buf[0].astype(jnp.float32)
-    for i in range(1, y):
-        acc = acc + buf[i].astype(jnp.float32)
-    return acc.astype(wire_dtype)
+
+def _bidir_ring_collective_matmul(chunk_fn, yid, axis: str, groups, y: int,
+                                  rows: int, chunk: int,
+                                  wire_dtype) -> jnp.ndarray:
+    """Bidirectional overlapped collective matmul ('bidir_ring').
+
+    Each N-chunk GEMM is computed ONCE (same ``chunk_fn`` as 'ring') and
+    split into two half-chunks: the low half rides the forward rotation
+    set (+s) to the chunk's owner, the high half rides the SECOND,
+    opposite rotation set (-s).  Total wire bytes match 'ring', but each
+    direction's links carry half of them — on a full-duplex torus both
+    directions progress simultaneously and per-link time halves (the
+    planner's ``reduction_wire_bytes_per_link`` models exactly this).
+
+    Split-chunk merge: the owner buffers half-chunks by source y-position
+    and rank-order-reduces each half independently, then concatenates.
+    fp32 addition is elementwise, so reduce-then-concat is bitwise
+    identical to 'ring's concat-then-reduce — the determinism contract
+    extends to this schedule with no new numeric cases.
+    """
+    half = chunk // 2
+    if half == 0:
+        # a 1-column chunk cannot be split; the unidirectional ring is
+        # bitwise identical (shared chunk_fn + shared rank-order merge)
+        return _ring_collective_matmul(chunk_fn, yid, axis, groups, y,
+                                       rows, chunk, wire_dtype)
+    gemms = {}
+
+    def g(d: int) -> jnp.ndarray:
+        # chunk GEMM at y-offset ``d``, cached: offset d's low half ships
+        # in round s=d, its high half in round s=y-d — one GEMM feeds both
+        if d not in gemms:
+            gemms[d] = chunk_fn(jax.lax.rem(yid + d, y))
+        return gemms[d]
+
+    buf_lo = jnp.zeros((y, rows, half), wire_dtype)
+    buf_hi = jnp.zeros((y, rows, chunk - half), wire_dtype)
+    own = g(0)
+    buf_lo = jax.lax.dynamic_update_index_in_dim(buf_lo, own[:, :half],
+                                                 yid, 0)
+    buf_hi = jax.lax.dynamic_update_index_in_dim(buf_hi, own[:, half:],
+                                                 yid, 0)
+    for s in range(1, y):
+        # forward hop: low half of the chunk owned s positions ahead;
+        # backward hop: high half of the chunk owned s positions behind.
+        # Neither send depends on any earlier hop, so the second ppermute
+        # set overlaps both the first set and the remaining chunk GEMMs.
+        recv_lo = jax.lax.ppermute(g(s)[:, :half], axis,
+                                   _rotation_pairs(groups, y, s))
+        recv_hi = jax.lax.ppermute(g(y - s)[:, half:], axis,
+                                   _rotation_pairs(groups, y, -s))
+        buf_lo = jax.lax.dynamic_update_index_in_dim(
+            buf_lo, recv_lo, jax.lax.rem(yid - s + y, y), 0)
+        buf_hi = jax.lax.dynamic_update_index_in_dim(
+            buf_hi, recv_hi, jax.lax.rem(yid + s, y), 0)
+    return jnp.concatenate([_rank_order_sum(buf_lo, wire_dtype),
+                            _rank_order_sum(buf_hi, wire_dtype)], axis=-1)
+
+
+def _overlapped_gather_partial(x2: jnp.ndarray, wl: jnp.ndarray, axis: str,
+                               zgroups, z: int, y: int,
+                               wire_dtype) -> jnp.ndarray:
+    """Chunked all-gather of A overlapped with the local GEMMs (the
+    'ksharded' Z>1, Y>1 path).
+
+    Each z-subgroup peer's natural-order K-piece arrives by its own
+    rotation ppermute of the ORIGINAL local piece — no hop depends on an
+    earlier hop, so every transfer is in flight while the already-arrived
+    pieces' GEMMs run (the GotoBLAS2-on-Versal pack/compute overlap on the
+    gather side; the barrier ``all_gather`` + monolithic GEMM this
+    replaces serialized the whole gather before the first MAC).
+
+    Every arriving piece is multiplied against its matching weight
+    row-block immediately; products are buffered by GLOBAL K-piece
+    position and reduced in ascending order at fp32.  All schedules build
+    their partial from this ONE helper on this path, so the K-piece
+    association is layout-specific but schedule-independent — the bitwise
+    cross-schedule contract survives.
+    """
+    md = jax.lax.axis_index(axis)
+    zz = md // y                  # z-position within the gather subgroup
+    rows, kloc = x2.shape         # kloc = K/model (one natural-order piece)
+    nz = wl.shape[-1]
+
+    def piece_gemm(piece, j):
+        # global K-piece j multiplies weight rows [j*kloc, (j+1)*kloc): the
+        # interleaved Y-block keeps pieces in ascending z-position order
+        wj = jax.lax.dynamic_slice_in_dim(wl, j * kloc, kloc, axis=0)
+        return kops.matmul(piece, wj, out_dtype=jnp.float32)
+
+    buf = jnp.zeros((z, rows, nz), jnp.float32)
+    buf = jax.lax.dynamic_update_index_in_dim(buf, piece_gemm(x2, zz), zz, 0)
+    for s in range(1, z):
+        recv = jax.lax.ppermute(x2, axis, _rotation_pairs(zgroups, z, s))
+        src = jax.lax.rem(zz - s + z, z)
+        buf = jax.lax.dynamic_update_index_in_dim(
+            buf, piece_gemm(recv, src), src, 0)
+    return _rank_order_sum(buf, wire_dtype)
 
 
 def _shard_map(body, mesh, in_specs, out_specs):
@@ -331,12 +470,22 @@ def xyz_matmul(
         res2 = res_l.reshape(-1, res_l.shape[-1]) if res_l is not None \
             else None
 
+        gather_partial = None
         if cfg.x_layout == "replicated":
             x2 = _slice_k_block(x2, yid, y, model)
+        elif z > 1 and y > 1:
+            # overlapped all-gather: the Y-block is never materialized —
+            # each natural-order K-piece hops in by ppermute and is
+            # consumed by its GEMM immediately (every schedule shares this
+            # partial, keeping numerics schedule-independent)
+            gather_partial = _overlapped_gather_partial(
+                x2, wl, "model", zgroups, z, y, wire_dtype)
         elif z > 1:
-            # assemble the Y-block from natural-order K shards: gather over
-            # the z-subgroup concatenates chunks {y, Y+y, ...} in order —
-            # exactly the interleaved block the weight layout expects.
+            # Y == 1: no chunk GEMMs to overlap with — barrier-gather the
+            # Y-block from natural-order K shards (the z-subgroup gather
+            # concatenates chunks {y, Y+y, ...} in order, exactly the
+            # interleaved block the weight layout expects) so the whole
+            # epilogue stays fused in the kernel's store phase below.
             x2 = jax.lax.all_gather(x2, "model", axis_index_groups=zgroups,
                                     axis=1, tiled=True)
 
@@ -357,21 +506,38 @@ def xyz_matmul(
         else:
             # the wire format (and its AD transpose buffers) stays 16-bit
             # when out_dtype says so; the rank-order reduction upcasts.
+            assert nz % y == 0, (nz, y)  # else chunking silently drops cols
+            chunk = nz // y
+            if gather_partial is not None:
+                # ksharded Z>1: the GEMM work already ran inside the
+                # overlapped gather — chunks are slices of ONE partial
+                def chunk_fn(c):
+                    return jax.lax.dynamic_slice_in_dim(
+                        gather_partial, c * chunk, chunk, axis=-1)
+            else:
+                def chunk_fn(c):
+                    return _chunk_gemm(x2, wl, c, chunk, wire_dtype)
+            rows2 = x2.shape[0]
             if cfg.schedule == "allreduce":
-                partial = _partial_chunks(x2, wl, y, wire_dtype)
+                partial = _partial_from_chunks(chunk_fn, y)
                 red = jax.lax.psum(partial, "model",
                                    axis_index_groups=ygroups)
                 out = jax.lax.dynamic_slice_in_dim(
-                    red, yid * (nz // y), nz // y, axis=-1)
+                    red, yid * chunk, chunk, axis=-1)
             elif cfg.schedule == "reduce_scatter":
-                partial = _partial_chunks(x2, wl, y, wire_dtype)
+                partial = _partial_from_chunks(chunk_fn, y)
                 out = jax.lax.psum_scatter(
                     partial, "model", scatter_dimension=partial.ndim - 1,
                     axis_index_groups=ygroups, tiled=True)
             elif cfg.schedule == "ring":
-                out = _ring_collective_matmul(x2, wl, "model", ygroups, y,
+                out = _ring_collective_matmul(chunk_fn, yid, "model",
+                                              ygroups, y, rows2, chunk,
                                               wire_dtype)
-            else:
+            elif cfg.schedule == "bidir_ring":
+                out = _bidir_ring_collective_matmul(chunk_fn, yid, "model",
+                                                    ygroups, y, rows2,
+                                                    chunk, wire_dtype)
+            else:  # unreachable: XYZConfig.__post_init__ validates
                 raise ValueError(cfg.schedule)
             if ep is not None:
                 out = _finish(out, md, res2)

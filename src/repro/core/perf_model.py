@@ -264,6 +264,42 @@ def fused_epilogue_savings(m: int, n: int, epilogue,
     }
 
 
+def collective_overlap_savings(m_loc: int, n_loc: int, y: int,
+                               z: int = 1, a_bytes: int = 0,
+                               device=None) -> Dict[str, float]:
+    """Per-link wire economics of the reduction schedules for one
+    ``[m_loc, n_loc]`` fp32 partial, plus the gather side.
+
+    The MaxEVA lesson priced here: throughput is won by overlapping data
+    movement with compute and balancing traffic across the interconnect.
+    'bidir_ring' splits every chunk across the two ring directions, so
+    each full-duplex link carries HALF the bytes of 'ring'
+    (``bidir_link_ratio`` ~ 0.5); the overlapped chunked gather moves the
+    same bytes as the barrier ``all_gather`` but off the critical path
+    (``gather_s_serial`` is what the overlap deletes from the step).
+    Consumed by ``benchmarks/fused_epilogue.py`` derived columns and
+    asserted in ``tests/test_planner.py``.
+    """
+    from repro.core.device_model import TPU_V5E
+    from repro.core.planner import (gather_wire_bytes_per_link,
+                                    reduction_wire_bytes_per_link)
+    device = device or TPU_V5E
+    c_bytes = m_loc * n_loc * 4
+    out: Dict[str, float] = {}
+    for sched in ("allreduce", "reduce_scatter", "ring", "bidir_ring"):
+        out[f"link_bytes_{sched}"] = reduction_wire_bytes_per_link(
+            c_bytes, y, sched)
+    out["bidir_link_ratio"] = (out["link_bytes_bidir_ring"]
+                               / max(out["link_bytes_ring"], 1e-9))
+    out["wire_s_ring"] = out["link_bytes_ring"] / device.ici_bw_per_link
+    out["wire_s_bidir_ring"] = (out["link_bytes_bidir_ring"]
+                                / device.ici_bw_per_link)
+    out["link_bytes_gather"] = gather_wire_bytes_per_link(a_bytes, z)
+    out["gather_s_serial"] = (out["link_bytes_gather"]
+                              / device.ici_bw_per_link)
+    return out
+
+
 def gemm_arithmetic_intensity(m: int, k: int, n: int, dtype: str = "bf16",
                               out_itemsize: Optional[int] = None) -> float:
     """FLOPs per HBM byte of an ``[m, k] x [k, n]`` GEMM at the given

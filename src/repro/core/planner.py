@@ -256,6 +256,40 @@ class TPUBlockPlan:
     hbm_bytes_per_flop: float
 
 
+def reduction_wire_bytes_per_link(c_bytes: int, y: int,
+                                  schedule: str) -> float:
+    """Per-link wire bytes of the Y-subgroup reduction of a ``c_bytes``
+    partial (the PLIO-port traffic analog, per ICI link).
+
+    'allreduce' pays the RS+AG decomposition (2(Y-1)/Y); 'reduce_scatter'
+    and 'ring' ship (Y-1)/Y of the partial over each link; 'bidir_ring'
+    moves the SAME total bytes but splits every chunk across the two ring
+    directions, so each (full-duplex) link carries half — the per-link
+    traffic halving the Versal torus energy study identifies as the
+    efficiency headroom.
+    """
+    if y <= 1 or schedule == "none":
+        return 0.0
+    if schedule == "allreduce":
+        return 2.0 * (y - 1) / y * c_bytes
+    if schedule in ("reduce_scatter", "ring"):
+        return (y - 1) / y * c_bytes
+    if schedule == "bidir_ring":
+        return (y - 1) / (2.0 * y) * c_bytes
+    raise ValueError(f"unknown schedule {schedule!r}")
+
+
+def gather_wire_bytes_per_link(a_bytes: int, z: int) -> float:
+    """Per-link bytes of (all-)gathering A over a Z-subgroup: each link
+    carries (Z-1)/Z of the gathered block, whether the gather is the
+    barrier ``all_gather`` (Y == 1) or the chunked ppermute ring the
+    overlapped path uses (Y > 1) — the overlap changes WHEN the bytes
+    move, not how many."""
+    if z <= 1:
+        return 0.0
+    return (z - 1) / z * a_bytes
+
+
 @dataclasses.dataclass(frozen=True)
 class XYZShardPlan:
     """Array-level decomposition of one GEMM over mesh axes.
@@ -264,8 +298,11 @@ class XYZShardPlan:
     y_shards: shards of K (contraction; needs on-array reduction = psum)
     z_shards: shards of N (column-parallel)
     schedule: 'allreduce' (P1 analog) | 'reduce_scatter' (P2 analog)
-              | 'ring' (beyond-paper overlapped collective matmul)
+              | 'ring' / 'bidir_ring' (beyond-paper overlapped collective
+                matmuls; bidir halves per-link reduction bytes)
               | 'none' (y_shards == 1)
+    est_gather_s: per-link seconds of gathering a model-sharded A over the
+                  Z-subgroup (0 when A is replicated or Z == 1)
     """
 
     x_shards: int
@@ -275,18 +312,31 @@ class XYZShardPlan:
     est_collective_s: float
     est_compute_s: float
     est_hbm_s: float
+    est_gather_s: float = 0.0
 
     @property
     def est_step_s(self) -> float:
-        """Step time under the schedule's overlap model: the 'ring'
-        collective matmul interleaves chunk GEMMs with ppermute hops, so
-        compute and wire overlap (max); the barrier schedules serialize
-        the collective after the local GEMM (sum)."""
-        if self.schedule == "ring":
+        """Step time under the schedule's overlap model: the overlapped
+        collective matmuls ('ring' / 'bidir_ring') interleave chunk GEMMs
+        with ppermute hops AND overlap the chunked gather of A, so compute
+        and wire overlap (max; reduction and gather share the ICI links,
+        so their times add inside the wire term).  The barrier reductions
+        serialize the collective after the local GEMM, but their partial
+        GEMMs still ride the chunked gather (max with compute).  Y == 1
+        ('none') keeps the serial barrier gather before its single GEMM.
+        """
+        if self.y_shards <= 1 or self.schedule == "none":
+            # no reduction AND no chunk GEMMs to hide the gather behind:
+            # xyz_matmul keeps the serial barrier gather at Y == 1
+            # whatever the schedule string says
+            return max(self.est_hbm_s,
+                       self.est_compute_s + self.est_gather_s)
+        if self.schedule in ("ring", "bidir_ring"):
             return max(self.est_compute_s, self.est_hbm_s,
-                       self.est_collective_s)
+                       self.est_collective_s + self.est_gather_s)
         return max(self.est_hbm_s,
-                   self.est_compute_s + self.est_collective_s)
+                   max(self.est_compute_s, self.est_gather_s)
+                   + self.est_collective_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -384,8 +434,10 @@ def plan_tpu_block(
 
 
 def _ring_collective_s(bytes_total: int, shards: int, device: TPUDevice) -> float:
-    """Ring all-reduce/gather time over one mesh axis: 2(n-1)/n for AR,
-    (n-1)/n for AG/RS; we charge the RS+AG decomposition (= AR)."""
+    """Ring all-reduce time over one mesh axis (2(n-1)/n, the RS+AG
+    decomposition) — kept for callers that want the schedule-agnostic
+    upper bound; the planner itself now prices each schedule via
+    ``reduction_wire_bytes_per_link``."""
     if shards <= 1 or bytes_total == 0:
         return 0.0
     return 2.0 * (shards - 1) / shards * bytes_total / device.ici_bw_per_link
@@ -441,29 +493,36 @@ def plan_tpu_shard(
                 if epilogue is not None else m_loc * (n // z) * ebytes
             hbm = (in_bytes + out_bytes) / device.hbm_bw
             # wire bytes (PLIO analog):
-            #  * A broadcast over Z (paper: A_{x,y} broadcast Z times) --
+            #  * A gathered over Z (paper: A_{x,y} broadcast Z times) --
             #    charged only if A arrives sharded over the model axis;
-            #  * partial-C reduction over Y (the adder tree).
+            #  * partial-C reduction over Y (the adder tree), priced
+            #    per-link per schedule.
             a_bytes = m_loc * (k // y) * ebytes
             c_bytes = m_loc * (n // z) * 4  # 32-bit partials (fp32/int32)
-            wire = 0.0
-            if a_sharded_on_model and z > 1:
-                wire += (z - 1) / z * a_bytes / device.ici_bw_per_link
-            if y > 1:
-                wire += _ring_collective_s(c_bytes, y, device)
-            sched = prefer_schedule
-            if sched is None:
-                if y == 1:
-                    sched = "none"
-                elif wire >= 0.1 * comp:
-                    # reduction time is material: the overlapped collective
-                    # matmul hides it behind the chunked local GEMM
-                    sched = "ring"
-                else:
-                    sched = "reduce_scatter" if z == 1 else "allreduce"
-            cand = XYZShardPlan(x, y, z, sched, wire, comp, hbm)
-            if best is None or cand.est_step_s < best.est_step_s:
-                best = cand
+            gather_s = 0.0
+            if a_sharded_on_model:
+                gather_s = gather_wire_bytes_per_link(a_bytes, z) \
+                    / device.ici_bw_per_link
+            if prefer_schedule is not None:
+                scheds = [prefer_schedule]
+            elif y == 1:
+                scheds = ["none"]
+            else:
+                scheds = ["allreduce", "reduce_scatter", "ring",
+                          "bidir_ring"]
+            for sched in scheds:
+                coll_s = reduction_wire_bytes_per_link(c_bytes, y, sched) \
+                    / device.ici_bw_per_link
+                cand = XYZShardPlan(x, y, z, sched, coll_s, comp, hbm,
+                                    gather_s)
+                # ties (compute- or HBM-bound points) break toward the
+                # fewest per-link wire bytes, so 'bidir_ring' wins over
+                # 'ring'/'reduce_scatter' exactly when wire cost is moot
+                key = (cand.est_step_s, coll_s + gather_s)
+                if best is None or key < (best.est_step_s,
+                                          best.est_collective_s
+                                          + best.est_gather_s):
+                    best = cand
         y *= 2
     assert best is not None
     return best

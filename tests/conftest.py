@@ -1,0 +1,31 @@
+"""Shared pytest configuration.
+
+Registers the ``multidev`` marker: tests carrying it drive the
+8-fake-device schedule-equivalence sweeps through subprocesses and are
+collected-but-skipped in the tier-1 run (they would roughly double its
+wall clock).  The CI multidev job enables them by exporting
+``REPRO_MULTIDEV=1`` and running ``pytest -m multidev -v`` (see
+``scripts/ci.sh multidev``), which also surfaces every per-check name in
+the log for triage.
+"""
+import os
+
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multidev: full 8-fake-device sweep; enabled by REPRO_MULTIDEV=1 "
+        "(run via scripts/ci.sh multidev)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if os.environ.get("REPRO_MULTIDEV"):
+        return
+    skip = pytest.mark.skip(
+        reason="multidev sweep: set REPRO_MULTIDEV=1 (scripts/ci.sh "
+               "multidev runs it)")
+    for item in items:
+        if "multidev" in item.keywords:
+            item.add_marker(skip)

@@ -1,0 +1,186 @@
+"""Negative-path tests for ``launch/hlo_analysis``.
+
+The detectors (``int8_bounce_count``, ``gemm_dispatches``,
+``weight_concat_count``) are CI gates: a false positive blocks a good PR
+and a false negative lets a regression ship.  These tests pin down the
+must-NOT-fire cases: HLO with zero dots, nested ``while`` loops, and the
+chunked-gather trace (a ``collective-permute`` chain with
+activation-piece concatenates) that must not be mistaken for apply-time
+weight concats.  The REAL compiled chunked-gather HLO is asserted in the
+multidev job (``_multidev_checks.check_overlapped_gather_hlo``); the
+snippets here keep the tier-1 suite single-device.
+"""
+import textwrap
+
+from repro.launch.hlo_analysis import (
+    analyze_hlo,
+    gemm_dispatches,
+    int8_bounce_count,
+    weight_concat_count,
+)
+
+
+def _hlo(body: str) -> str:
+    return textwrap.dedent(body)
+
+
+# ---------------------------------------------------------------------------
+# zero-dot modules
+# ---------------------------------------------------------------------------
+
+HLO_NO_DOTS = _hlo("""
+    HloModule nodots
+
+    ENTRY %main (p0: s8[4,8], p1: f32[4,8]) -> f32[4,8] {
+      %p0 = s8[4,8] parameter(0)
+      %p1 = f32[4,8] parameter(1)
+      %deq = f32[4,8] convert(%p0)
+      ROOT %add = f32[4,8] add(%deq, %p1)
+    }
+""")
+
+
+def test_no_dots_no_bounce():
+    """A dequantized int8 tensor that never reaches a dot is NOT a
+    bounce (elementwise consumers are exactly what the serving path's
+    norms/embeddings do legitimately)."""
+    assert int8_bounce_count(HLO_NO_DOTS) == 0
+
+
+def test_no_dots_no_gemm_dispatches():
+    assert gemm_dispatches(HLO_NO_DOTS, 8) == 0
+    assert gemm_dispatches(HLO_NO_DOTS, 4) == 0
+
+
+def test_no_dots_analyze_flops_zero():
+    assert analyze_hlo(HLO_NO_DOTS)["flops"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# nested while loops
+# ---------------------------------------------------------------------------
+
+HLO_NESTED_WHILE = _hlo("""
+    HloModule nested
+
+    %inner_cond (ip: (s32[], f32[4,16])) -> pred[] {
+      %ip = (s32[], f32[4,16]) parameter(0)
+      %iv = s32[] get-tuple-element(%ip), index=0
+      %ilim = s32[] constant(3)
+      ROOT %ilt = pred[] compare(%iv, %ilim), direction=LT
+    }
+
+    %inner_body (ibp: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+      %ibp = (s32[], f32[4,16]) parameter(0)
+      %ia = f32[4,16] get-tuple-element(%ibp), index=1
+      %iw = f32[16,16] constant({...})
+      %idot = f32[4,16] dot(%ia, %iw), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ii = s32[] get-tuple-element(%ibp), index=0
+      %ione = s32[] constant(1)
+      %inext = s32[] add(%ii, %ione)
+      ROOT %it = (s32[], f32[4,16]) tuple(%inext, %idot)
+    }
+
+    %outer_cond (op: (s32[], f32[4,16])) -> pred[] {
+      %op = (s32[], f32[4,16]) parameter(0)
+      %ov = s32[] get-tuple-element(%op), index=0
+      %olim = s32[] constant(5)
+      ROOT %olt = pred[] compare(%ov, %olim), direction=LT
+    }
+
+    %outer_body (obp: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+      %obp = (s32[], f32[4,16]) parameter(0)
+      ROOT %ow = (s32[], f32[4,16]) while(%obp), condition=%inner_cond, body=%inner_body
+    }
+
+    ENTRY %main (p0: f32[4,16]) -> (s32[], f32[4,16]) {
+      %p0 = f32[4,16] parameter(0)
+      %zero = s32[] constant(0)
+      %init = (s32[], f32[4,16]) tuple(%zero, %p0)
+      ROOT %w = (s32[], f32[4,16]) while(%init), condition=%outer_cond, body=%outer_body
+    }
+""")
+
+
+def test_nested_while_no_bounce_without_int8():
+    """Trip-count recursion over nested whiles must not conjure bounces
+    out of float-only loops."""
+    assert int8_bounce_count(HLO_NESTED_WHILE) == 0
+
+
+def test_nested_while_gemm_dispatch_static_count():
+    """gemm_dispatches is a STATIC dot count (dispatch sites, not
+    executions): the loop nest contributes its single traced dot."""
+    assert gemm_dispatches(HLO_NESTED_WHILE, 16) == 1
+    assert gemm_dispatches(HLO_NESTED_WHILE, 99) == 0
+
+
+def test_nested_while_flops_scale_by_trip_counts():
+    """analyze_hlo DOES multiply trip counts through the NESTING: the
+    entry while runs %outer_body 5 times, whose inner while runs
+    %inner_body 3 times, one dot each = 5 * 3 * (2 * 4 * 16 * 16)."""
+    assert analyze_hlo(HLO_NESTED_WHILE)["flops"] == \
+        5 * 3 * 2.0 * 4 * 16 * 16
+
+
+HLO_NESTED_WHILE_BOUNCE = HLO_NESTED_WHILE.replace(
+    "  %p0 = f32[4,16] parameter(0)\n",
+    "  %q0 = s8[4,16] parameter(0)\n"
+    "  %p0 = f32[4,16] convert(%q0)\n",
+).replace("ENTRY %main (p0: f32[4,16])", "ENTRY %main (q0: s8[4,16])")
+assert HLO_NESTED_WHILE_BOUNCE != HLO_NESTED_WHILE  # the rewrite applied
+
+
+def test_nested_while_dequant_reaching_loop_dot_is_one_bounce():
+    """An s8->f32 convert whose value flows INTO the loop and reaches the
+    dot is exactly ONE bounce (a dispatch site), however many times the
+    nested loops iterate it."""
+    assert int8_bounce_count(HLO_NESTED_WHILE_BOUNCE) == 1
+
+
+# ---------------------------------------------------------------------------
+# the chunked-gather trace shape
+# ---------------------------------------------------------------------------
+
+# Mirrors the compiled ksharded Z>1 path: rotation collective-permutes of
+# the activation piece, per-piece dots, buffer concatenates whose
+# trailing-2 dim is ROWS (=32), never the weight's K (=16).  d_model in
+# the detector call is the weight K dimension.
+HLO_CHUNKED_GATHER = _hlo("""
+    HloModule gather
+
+    ENTRY %main (p0: f32[32,8], p1: f32[16,64]) -> f32[32,128] {
+      %p0 = f32[32,8] parameter(0)
+      %p1 = f32[16,64] parameter(1)
+      %hop1 = f32[32,8] collective-permute(%p0), source_target_pairs={{0,2},{2,0},{1,3},{3,1}}
+      %w0 = f32[8,64] slice(%p1), slice={[0:8], [0:64]}
+      %w1 = f32[8,64] slice(%p1), slice={[8:16], [0:64]}
+      %g0 = f32[32,64] dot(%p0, %w0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %g1 = f32[32,64] dot(%hop1, %w1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %sum = f32[32,64] add(%g0, %g1)
+      %lo = f32[32,32] slice(%sum), slice={[0:32], [0:32]}
+      %hi = f32[32,32] slice(%sum), slice={[0:32], [32:64]}
+      %hop2 = f32[32,32] collective-permute(%lo), source_target_pairs={{0,1},{1,0}}
+      %hop3 = f32[32,32] collective-permute(%hi), source_target_pairs={{1,0},{0,1}}
+      %merge = f32[32,64] concatenate(%hop2, %hop3), dimensions={1}
+      ROOT %out = f32[32,128] concatenate(%sum, %merge), dimensions={1}
+    }
+""")
+
+
+def test_chunked_gather_permutes_not_weight_concats():
+    """The ppermute chain's half-chunk merges concatenate ACTIVATION
+    pieces ([rows, half]); with rows != d_model they must not be counted
+    as apply-time weight concats."""
+    assert weight_concat_count(HLO_CHUNKED_GATHER, 16) == 0
+
+
+def test_chunked_gather_no_bounce_and_dot_count():
+    assert int8_bounce_count(HLO_CHUNKED_GATHER) == 0
+    assert gemm_dispatches(HLO_CHUNKED_GATHER, 64) == 2
+
+
+def test_chunked_gather_wire_counts_permutes():
+    res = analyze_hlo(HLO_CHUNKED_GATHER)
+    assert res["wire_collective-permute"] > 0
+    assert res.get("wire_all-gather", 0.0) == 0.0

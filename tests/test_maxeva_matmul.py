@@ -27,16 +27,26 @@ def test_weight_layout_roundtrip():
     _run("weight_layout_roundtrip")
 
 
-def test_xyz_forward_all_schedules():
-    _run("xyz_forward_all_schedules")
+def test_schedule_equivalence():
+    """Registered sweep: bitwise fp32 equality across all four schedules
+    (incl. 'bidir_ring') + ref-oracle closeness, both layouts, Y in
+    {1, 2, 4}.  The full epilogue grid runs under ``pytest -m multidev``
+    (scripts/ci.sh multidev)."""
+    _run("schedule_equivalence")
+
+
+def test_schedule_equivalence_epilogue():
+    _run("schedule_equivalence_epilogue")
 
 
 def test_replicated_out():
     _run("replicated_out")
 
 
-def test_ring_bitwise_matches_reduce_scatter():
-    _run("ring_bitwise_matches_reduce_scatter")
+def test_overlapped_gather_hlo():
+    """ksharded Z>1 Y>1: no barrier all-gather of A in the compiled HLO
+    (the chunked ppermute gather replaced it)."""
+    _run("overlapped_gather_hlo")
 
 
 def test_xyz_epilogue():
@@ -53,3 +63,39 @@ def test_mlp_composition():
 
 def test_collective_bytes_ordering():
     _run("collective_bytes_ordering")
+
+
+# ---------------------------------------------------------------------------
+# config validation (pure; no mesh needed)
+# ---------------------------------------------------------------------------
+
+def test_unknown_schedule_raises():
+    """A typo like 'ring ' must raise, not silently run some default
+    schedule (the regression this pins: the old if/elif chain fell
+    through for Y == 1 and the model==1 path never looked at the
+    string)."""
+    from repro.core.maxeva_matmul import SCHEDULES, XYZConfig
+    for bad in ("ring ", "Ring", "reduce-scatter", "none", "", "bidir"):
+        with pytest.raises(ValueError, match="schedule"):
+            XYZConfig(y=2, schedule=bad)
+    for good in SCHEDULES:
+        XYZConfig(y=2, schedule=good)  # all four construct cleanly
+
+
+def test_unknown_x_layout_raises():
+    from repro.core.maxeva_matmul import X_LAYOUTS, XYZConfig
+    for bad in ("replicatedd", "k_sharded", "KSHARDED", ""):
+        with pytest.raises(ValueError, match="x_layout"):
+            XYZConfig(y=2, x_layout=bad)
+    for good in X_LAYOUTS:
+        XYZConfig(y=2, x_layout=good)
+
+
+def test_dataclasses_replace_revalidates():
+    """dataclasses.replace re-runs __post_init__, so a plan mutated with
+    a bad schedule string still fails loudly."""
+    import dataclasses
+    from repro.core.maxeva_matmul import XYZConfig
+    cfg = XYZConfig(y=2, schedule="bidir_ring")
+    with pytest.raises(ValueError, match="schedule"):
+        dataclasses.replace(cfg, schedule="ringg")

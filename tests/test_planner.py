@@ -17,10 +17,13 @@ except ImportError:  # degrade to the fixed-example smoke subset below
 from repro.core.device_model import AIE_VC1902, TPU_V5E, AIEDevice, DTYPE_BYTES
 from repro.core.planner import (
     ArrayConfig,
+    XYZShardPlan,
+    gather_wire_bytes_per_link,
     plan_tpu_block,
     plan_tpu_matmul,
     plan_tpu_shard,
     pnr_feasible,
+    reduction_wire_bytes_per_link,
     solve_aie_array,
     solve_aie_kernel_tiles,
 )
@@ -190,3 +193,78 @@ def test_tpu_matmul_plan_end_to_end():
     assert p.shard.x_shards == 16
     assert p.shard.y_shards * p.shard.z_shards == 16
     assert p.block.vmem_bytes <= TPU_V5E.vmem_budget
+
+
+# ---------------------------------------------------------------------------
+# Per-link wire-byte model: bidirectional ring + overlapped gather
+# ---------------------------------------------------------------------------
+
+def test_bidir_ring_halves_per_link_bytes():
+    """The acceptance invariant: for the same partial, 'bidir_ring' puts
+    HALF the bytes of 'ring' on each (full-duplex) link; 'ring' matches
+    'reduce_scatter'; 'allreduce' pays the RS+AG double."""
+    c_bytes = 512 * 4096 * 4
+    for y in (2, 4, 8, 16):
+        ring = reduction_wire_bytes_per_link(c_bytes, y, "ring")
+        bidir = reduction_wire_bytes_per_link(c_bytes, y, "bidir_ring")
+        assert ring == pytest.approx((y - 1) / y * c_bytes)
+        assert bidir == pytest.approx(ring / 2)
+        assert reduction_wire_bytes_per_link(c_bytes, y, "reduce_scatter") \
+            == pytest.approx(ring)
+        assert reduction_wire_bytes_per_link(c_bytes, y, "allreduce") \
+            == pytest.approx(2 * ring)
+    # no reduction at Y == 1, whatever the schedule string says
+    for sched in ("none", "ring", "bidir_ring"):
+        assert reduction_wire_bytes_per_link(c_bytes, 1, sched) == 0.0
+    with pytest.raises(ValueError):
+        reduction_wire_bytes_per_link(c_bytes, 4, "ring ")  # typo'd name
+    assert gather_wire_bytes_per_link(1000, 1) == 0.0
+    assert gather_wire_bytes_per_link(1000, 4) == pytest.approx(750.0)
+
+
+def test_overlap_model_gather_term():
+    """Overlapped schedules hide the chunked gather + reduction behind the
+    chunk GEMMs (max); Y == 1 keeps the serial barrier gather."""
+    comp, hbm, coll, gather = 5e-4, 1e-4, 1e-4, 2e-4
+    over = XYZShardPlan(1, 2, 2, "bidir_ring", coll, comp, hbm, gather)
+    assert over.est_step_s == pytest.approx(comp)  # wire fully hidden
+    serial = XYZShardPlan(1, 1, 4, "none", 0.0, comp, hbm, gather)
+    assert serial.est_step_s == pytest.approx(comp + gather)
+    # barrier reduction: gather rides the partial GEMMs, reduction doesn't
+    barrier = XYZShardPlan(1, 2, 2, "reduce_scatter", coll, comp, hbm,
+                           gather)
+    assert barrier.est_step_s == pytest.approx(comp + coll)
+
+
+def test_planner_picks_bidir_ring_for_wire_heavy_reduction():
+    """The K-heavy row-parallel down-projection (A model-sharded) should
+    now land on the bidirectional overlapped collective matmul, and its
+    modeled step must beat (or tie) a forced 'ring' plan."""
+    axes = {"data": 16, "model": 16}
+    down = plan_tpu_shard(8192, 65536, 4096, "bf16", axes,
+                          a_sharded_on_model=True)
+    assert down.y_shards > 1
+    assert down.schedule == "bidir_ring"
+    forced = plan_tpu_shard(8192, 65536, 4096, "bf16", axes,
+                            a_sharded_on_model=True,
+                            prefer_schedule="ring")
+    assert forced.schedule == "ring"
+    assert down.est_step_s <= forced.est_step_s
+    # same factorization, same partial: bidir halves the per-link time
+    same_y = plan_tpu_shard(8192, 65536, 4096, "bf16", axes,
+                            a_sharded_on_model=True,
+                            prefer_schedule="bidir_ring")
+    assert same_y.schedule == "bidir_ring"
+    assert same_y.est_step_s <= forced.est_step_s
+
+
+def test_perf_model_overlap_savings():
+    from repro.core.perf_model import collective_overlap_savings
+    sav = collective_overlap_savings(512, 4096, y=4, z=4,
+                                     a_bytes=512 * 2048 * 2)
+    assert sav["bidir_link_ratio"] == pytest.approx(0.5)
+    assert sav["link_bytes_bidir_ring"] == pytest.approx(
+        sav["link_bytes_ring"] / 2)
+    assert sav["link_bytes_allreduce"] > sav["link_bytes_reduce_scatter"]
+    assert sav["gather_s_serial"] > 0.0
+    assert sav["wire_s_bidir_ring"] == pytest.approx(sav["wire_s_ring"] / 2)
