@@ -53,7 +53,8 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
     [invariant violations])."""
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     sys.path.insert(0, _ROOT)
-    from benchmarks import fused_epilogue, int8_decode, tpu_matmul
+    from benchmarks import (fused_epilogue, int8_decode,
+                            serve_guard_overhead, tpu_matmul)
 
     rows: List[Tuple[str, float, str]] = []
     # one pass of the interleaved fused-vs-unfused sweep (the gate's own
@@ -66,6 +67,11 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
     rows += fused_epilogue.ring_overlap_rows()
     rows += tpu_matmul.rows()
     rows += int8_decode.rows()
+    # serve_guard_overhead asserts the hardened decode loop's two claims:
+    # identical decode HLO with guards on/off (structural, hard fail) and
+    # <2% health-guard overhead per decode step (timing, WARN — same
+    # noise policy as fused_le_unfused)
+    rows += serve_guard_overhead.rows()
 
     out: Dict[str, float] = {}
     violations: List[str] = []
@@ -86,6 +92,17 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
             # 3-pass standalone benchmark, so report without failing
             print(f"bench_gate: WARN {name} fused epilogue measured "
                   f"slower than unfused this pass ({derived})")
+        if "decode_hlo_unchanged=False" in derived:
+            # structural invariant (HLO string equality, noise-free):
+            # health guards must never alter the traced decode step
+            violations.append(f"{name}: guards changed the decode-step "
+                              f"HLO ({derived})")
+        if "guard_overhead_lt_2pct=False" in derived:
+            # timing-derived (same policy as fused_le_unfused): the
+            # standalone benchmark entry point fails hard on this, the
+            # gate's single pass only warns
+            print(f"bench_gate: WARN {name} health-guard overhead "
+                  f"exceeded 2% this pass ({derived})")
     return out, violations
 
 

@@ -3,10 +3,11 @@
 # two can never drift (.github/workflows/ci.yml invokes these subcommands;
 # the env vars for every job live HERE, not in the workflow).
 #
-#   scripts/ci.sh             # everything (tier1 + multidev + bench)
+#   scripts/ci.sh             # everything (tier1 + multidev + bench + robustness)
 #   scripts/ci.sh tier1       # ROADMAP tier-1 pytest suite
 #   scripts/ci.sh multidev    # fake-8-device sharded checks
 #   scripts/ci.sh bench       # benchmark-regression gate (BENCH_ci.json)
+#   scripts/ci.sh robustness  # fault-injection suite + guard-overhead row
 #
 # Dependency install is FULLY optional: the suite degrades gracefully
 # without the dev extras (property tests fall back to smoke subsets), and
@@ -75,12 +76,27 @@ bench() {
         python scripts/bench_gate.py "$@"
 }
 
+robustness() {
+    # fault-injection suite: every injected fault class (NaN/Inf logits,
+    # int8 saturation, checkpoint truncation/bit-flips, host stalls,
+    # transient failures) must be recovered or converted to a structured
+    # per-request error — the engine itself survives every drill.  Also
+    # runs the standalone guard-overhead benchmark, which HARD-fails if
+    # the guards change the decode HLO or exceed the 2% step budget
+    # (unlike the bench gate's WARN, this run is the dedicated signal).
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -q tests/test_robustness.py
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python benchmarks/serve_guard_overhead.py
+}
+
 cmd="${1:-all}"
 [[ $# -gt 0 ]] && shift
 case "$cmd" in
-    tier1)    install_extras; tier1 "$@" ;;
-    multidev) install_extras; multidev ;;
-    bench)    install_extras; bench "$@" ;;
-    all)      install_extras; tier1; multidev; bench ;;
-    *) echo "usage: scripts/ci.sh [tier1|multidev|bench|all]" >&2; exit 2 ;;
+    tier1)      install_extras; tier1 "$@" ;;
+    multidev)   install_extras; multidev ;;
+    bench)      install_extras; bench "$@" ;;
+    robustness) install_extras; robustness ;;
+    all)        install_extras; tier1; multidev; bench; robustness ;;
+    *) echo "usage: scripts/ci.sh [tier1|multidev|bench|robustness|all]" >&2; exit 2 ;;
 esac

@@ -1,16 +1,31 @@
-"""Sharded, async, atomic checkpointing with elastic restore.
+"""Sharded, async, atomic, DURABLE checkpointing with elastic restore.
 
 Layout per step:
     <dir>/step_000123.tmp/ ... -> atomically renamed to <dir>/step_000123/
-        manifest.json   (tree structure, shapes, dtypes, hashes)
+        manifest.json   (tree structure, per-leaf shapes, dtypes, crc32s,
+                         and the parameter's tree path)
         arr_<n>.npy     (one file per leaf, logical/unsharded values)
 
 Properties a 1000-node job needs:
-  * ATOMIC: a crash mid-write leaves only a .tmp dir, never a truncated
-    checkpoint; restore scans for the newest COMPLETE step.
-  * ASYNC: serialization happens on a background thread from host copies,
-    off the training thread.
-  * INTEGRITY: per-leaf crc32 in the manifest, verified at restore.
+  * ATOMIC + DURABLE: every leaf and the manifest are fsync'd, the tmp
+    directory is fsync'd before the rename and the parent directory
+    after — a crash mid-write leaves only a .tmp dir (never a truncated
+    checkpoint) and a crash right after ``save`` returns cannot lose a
+    committed step to the page cache.  Restore scans for the newest
+    COMPLETE step.
+  * ASYNC with LOUD failures: serialization happens on a background
+    thread from host copies, off the training thread — and a writer
+    exception is stored and re-raised at the next synchronization point
+    (``wait()`` or the next ``save()``), never dropped on the floor to be
+    discovered at restore time.
+  * INTEGRITY: per-leaf crc32 + shape/dtype in the manifest, verified at
+    restore; any mismatch raises ``CheckpointCorruptionError`` naming the
+    corrupted PARAMETER (its tree path), and ``restore(...,
+    fallback=True)`` falls back to the newest earlier intact step instead
+    of dying (the serving engine's default — stale weights beat no
+    weights).
+  * GC SAFETY: retention (``keep``) never deletes a step whose save is
+    still in flight (pending steps are tracked and skipped).
   * ELASTIC: leaves are stored LOGICALLY (unsharded).  Restore takes the
     *target* mesh + specs and re-places every leaf — the job can come back
     on fewer/more devices, a different mesh shape, or a different
@@ -32,8 +47,36 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 
+class CheckpointCorruptionError(IOError):
+    """A step failed integrity verification at restore.  ``param`` is the
+    tree path of the corrupted parameter (or ``manifest.json``), so the
+    operator knows WHAT is damaged, not just that numpy choked."""
+
+    def __init__(self, step: int, param: str, reason: str):
+        super().__init__(
+            f"checkpoint step {step} corrupted at {param!r}: {reason}")
+        self.step = step
+        self.param = param
+        self.reason = reason
+
+
 def _flatten(tree: Any) -> Tuple[List[Any], Any]:
     return jax.tree.flatten(tree)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _write_leaf(path: str, arr: np.ndarray) -> None:
+    with open(path, "wb") as f:
+        np.save(f, arr)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 class CheckpointManager:
@@ -43,33 +86,58 @@ class CheckpointManager:
         self.async_save = async_save
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._pending: set = set()      # steps with a save in flight
+        self._error: Optional[BaseException] = None
 
     # -- save -----------------------------------------------------------------
 
     def save(self, step: int, tree: Any, blocking: bool = False) -> None:
-        leaves, treedef = _flatten(tree)
+        kp_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        paths = [jax.tree_util.keystr(kp) for kp, _ in kp_leaves]
         # host copies first (cheap on CPU; device->host on TPU) so training
         # can proceed while the writer thread serializes
-        host = [np.asarray(x) for x in leaves]
-        self.wait()
+        host = [np.asarray(x) for _, x in kp_leaves]
+        self.wait()  # serializes writers AND re-raises a prior async failure
+        with self._lock:
+            self._pending.add(step)
 
         def write():
             tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
             final = os.path.join(self.dir, f"step_{step:08d}")
-            os.makedirs(tmp, exist_ok=True)
-            manifest = {"step": step, "treedef": str(treedef), "leaves": []}
-            for i, arr in enumerate(host):
-                path = os.path.join(tmp, f"arr_{i}.npy")
-                np.save(path, arr)
-                manifest["leaves"].append({
-                    "file": f"arr_{i}.npy",
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
-                })
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            os.rename(tmp, final)  # atomic commit
+            try:
+                os.makedirs(tmp, exist_ok=True)
+                manifest = {"step": step, "treedef": str(treedef),
+                            "leaves": []}
+                for i, arr in enumerate(host):
+                    _write_leaf(os.path.join(tmp, f"arr_{i}.npy"), arr)
+                    manifest["leaves"].append({
+                        "file": f"arr_{i}.npy",
+                        "param": paths[i],
+                        "shape": list(arr.shape),
+                        "dtype": str(arr.dtype),
+                        "crc32": zlib.crc32(
+                            np.ascontiguousarray(arr).tobytes()),
+                    })
+                mpath = os.path.join(tmp, "manifest.json")
+                with open(mpath, "w") as f:
+                    json.dump(manifest, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                _fsync_dir(tmp)
+                os.rename(tmp, final)  # atomic commit
+                _fsync_dir(self.dir)   # the rename itself must survive
+            except BaseException as e:  # noqa: BLE001 — must not vanish
+                with self._lock:
+                    if self._error is None:  # keep the FIRST failure
+                        self._error = e
+                    self._pending.discard(step)
+                shutil.rmtree(tmp, ignore_errors=True)
+                return
+            # durable from here on: the step may leave the pending set
+            # (and is immediately eligible for its own retention policy)
+            with self._lock:
+                self._pending.discard(step)
             self._gc()
 
         if self.async_save and not blocking:
@@ -77,14 +145,30 @@ class CheckpointManager:
             self._thread.start()
         else:
             write()
+            self._raise_pending_error()
 
     def wait(self):
+        """Join an in-flight async save and re-raise its failure, if any.
+        The stored exception is raised ONCE (the first sync point after
+        the failure) and then cleared."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        self._raise_pending_error()
+
+    def _raise_pending_error(self):
+        with self._lock:
+            err, self._error = self._error, None
+        if err is not None:
+            raise err
 
     def _gc(self):
-        steps = self.all_steps()
+        with self._lock:
+            pending = set(self._pending)
+        # a step whose save is still in flight must never be deleted, and
+        # is excluded from the retention window entirely (it does not
+        # count as one of the `keep` durable steps either)
+        steps = [s for s in self.all_steps() if s not in pending]
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
@@ -107,11 +191,19 @@ class CheckpointManager:
     def restore(self, step: Optional[int], like: Any,
                 mesh: Optional[Mesh] = None,
                 specs: Optional[Any] = None,
-                defs: Optional[Any] = None) -> Tuple[int, Any]:
+                defs: Optional[Any] = None,
+                fallback: bool = False) -> Tuple[int, Any]:
         """Restore onto the CURRENT mesh/partitioning (elastic).
 
         ``like`` provides the tree structure; ``specs`` (PartitionSpec tree)
         + ``mesh`` re-place each leaf.  Returns (step, tree).
+
+        Integrity: every leaf is verified (crc32 + shape/dtype) against
+        the manifest; corruption raises ``CheckpointCorruptionError``
+        naming the damaged parameter.  With ``fallback=True`` a corrupted
+        step is reported loudly and the newest EARLIER intact step is
+        restored instead; the error is raised only when no intact step
+        remains.
 
         ``defs`` (the model's ParamDef tree) additionally enables legacy
         migration: a checkpoint written with packed params stored as their
@@ -119,12 +211,39 @@ class CheckpointManager:
         leaf count and packed in place, so pre-packing checkpoints restore
         transparently onto the packed schema.
         """
+        steps = self.all_steps()
         if step is None:
-            step = self.latest_step()
-        assert step is not None, "no checkpoint found"
+            assert steps, "no checkpoint found"
+            candidates = list(reversed(steps))
+        else:
+            candidates = [step] + (
+                [s for s in reversed(steps) if s < step] if fallback else [])
+        last_err: Optional[CheckpointCorruptionError] = None
+        for s in candidates:
+            try:
+                return s, self._restore_step(s, like, mesh, specs, defs)
+            except CheckpointCorruptionError as e:
+                last_err = e
+                if not fallback:
+                    raise
+                print(f"checkpoint: {e}; falling back to the previous "
+                      f"intact step")
+        assert last_err is not None
+        raise CheckpointCorruptionError(
+            last_err.step, last_err.param,
+            f"{last_err.reason} (and no earlier intact step to fall "
+            f"back to)")
+
+    def _restore_step(self, step: int, like: Any, mesh: Optional[Mesh],
+                      specs: Optional[Any], defs: Optional[Any]) -> Any:
         d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            manifest = json.load(f)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptionError(
+                step, "manifest.json",
+                f"unreadable manifest ({type(e).__name__}: {e})") from e
         leaves_like, treedef = _flatten(like)
         if len(manifest["leaves"]) != len(leaves_like):
             assert defs is not None, (
@@ -135,8 +254,8 @@ class CheckpointManager:
                 "tree> to migrate it (Trainer/ServeEngine do this for "
                 "fp32 optimizer state; packed_qkv=False on the config "
                 "is the schema escape hatch)")
-            return step, self._restore_legacy(d, manifest, like, mesh,
-                                              specs, defs)
+            return self._restore_legacy(d, step, manifest, like, mesh,
+                                        specs, defs)
         spec_leaves = self._spec_leaves(specs, len(leaves_like))
         assert len(manifest["leaves"]) == len(leaves_like) == \
             len(spec_leaves), (len(manifest["leaves"]), len(leaves_like),
@@ -144,13 +263,13 @@ class CheckpointManager:
         out = []
         for meta, like_leaf, spec in zip(manifest["leaves"], leaves_like,
                                          spec_leaves):
-            arr = self._load_leaf(d, meta)
+            arr = self._load_leaf(d, meta, step)
             out.append(self._place(arr, mesh, spec))
-        return step, jax.tree.unflatten(treedef, out)
+        return jax.tree.unflatten(treedef, out)
 
     # -- legacy (unpacked-view) migration --------------------------------------
 
-    def _restore_legacy(self, d: str, manifest, like: Any,
+    def _restore_legacy(self, d: str, step: int, manifest, like: Any,
                         mesh: Optional[Mesh], specs: Optional[Any],
                         defs: Any):
         """Load a checkpoint whose packed params are stored as separate
@@ -167,7 +286,8 @@ class CheckpointManager:
             assert tuple(meta["shape"]) == tuple(leaf.shape), (
                 "legacy leaf shape mismatch (flatten-order drift?)",
                 meta["file"], meta["shape"], leaf.shape)
-        host = [self._load_leaf(d, meta) for meta in manifest["leaves"]]
+        host = [self._load_leaf(d, meta, step)
+                for meta in manifest["leaves"]]
         packed = pm.pack_tree(defs, jax.tree.unflatten(legacy_def, host))
         leaves, treedef = _flatten(packed)
         assert treedef == _flatten(like)[1], "migrated tree shape mismatch"
@@ -193,11 +313,28 @@ class CheckpointManager:
             specs,
             is_leaf=lambda s: s is None or isinstance(s, PartitionSpec))
 
-    def _load_leaf(self, d: str, meta) -> np.ndarray:
-        arr = np.load(os.path.join(d, meta["file"]))
+    def _load_leaf(self, d: str, meta, step: int) -> np.ndarray:
+        name = meta.get("param", meta["file"])
+        try:
+            arr = np.load(os.path.join(d, meta["file"]))
+        except Exception as e:  # truncated/torn .npy: parser-level failure
+            raise CheckpointCorruptionError(
+                step, name,
+                f"unreadable leaf file {meta['file']} "
+                f"({type(e).__name__}: {e})") from e
+        if list(arr.shape) != list(meta["shape"]) \
+                or str(arr.dtype) != meta["dtype"]:
+            raise CheckpointCorruptionError(
+                step, name,
+                f"shape/dtype mismatch: manifest says "
+                f"{meta['shape']}/{meta['dtype']}, file holds "
+                f"{list(arr.shape)}/{arr.dtype}")
         crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
         if crc != meta["crc32"]:
-            raise IOError(f"checkpoint corruption in {meta['file']}")
+            raise CheckpointCorruptionError(
+                step, name,
+                f"crc32 mismatch in {meta['file']} (expected "
+                f"{meta['crc32']}, got {crc})")
         return arr
 
     def _place(self, arr, mesh: Optional[Mesh], spec):

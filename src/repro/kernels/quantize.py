@@ -71,6 +71,32 @@ def quantize_weight_colwise(w: jnp.ndarray) -> QuantizedWeight:
     return QuantizedWeight(q, s)
 
 
+def quantize_fixed_scale(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Quantize with a FIXED (externally calibrated) scale.
+
+    Unlike ``quantize_symmetric`` — whose per-call absmax scale maps the
+    largest value to exactly ±127 and therefore never clips — a fixed
+    calibrated scale CAN saturate when the activation range drifts past
+    calibration.  The clip at ±127 is exactly where that saturation lands,
+    which makes it countable: ``saturation_fraction`` on this function's
+    output is the quantize-epilogue health counter the serving guard
+    monitors (``ServeEngine``'s int8 -> fp32 graceful degradation).
+    """
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def saturation_fraction(q: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Fraction of int8 values pinned at the clip boundary (|q| == 127)
+    along ``axis`` — per-row with the default, i.e. one health number per
+    batch lane for a ``[B, N]`` activation tile.  A freshly
+    absmax-quantized tensor reports ~1/N (only the max element sits at
+    127); values approaching 1.0 mean the fixed scale is clipping most of
+    the tensor and the int8 GEMM results are garbage."""
+    sat = (jnp.abs(q.astype(jnp.int32)) >= 127).astype(jnp.float32)
+    return jnp.mean(sat, axis=axis)
+
+
 def _quantize_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)
     absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)

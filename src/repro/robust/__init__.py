@@ -1,0 +1,31 @@
+"""Fault-tolerance layer for the serving stack: deterministic fault
+injection (``faults``), numerical-health guards + structured per-request
+statuses (``guards``), and the retry/backoff supervisor (``retry``).
+See ``docs/robustness.md`` for the fault model and guard invariants."""
+from repro.robust.faults import (
+    FaultPlan,
+    LogitFault,
+    StallFault,
+    TransientServeError,
+    bitflip_leaf,
+    truncate_leaf,
+    truncate_manifest,
+)
+from repro.robust.guards import (
+    STATUS_DEGRADED,
+    STATUS_NONFINITE,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
+    GenerateResult,
+    NumericalHealthError,
+)
+from repro.robust.retry import generate_with_retry
+
+__all__ = [
+    "FaultPlan", "LogitFault", "StallFault", "TransientServeError",
+    "bitflip_leaf", "truncate_leaf", "truncate_manifest",
+    "GenerateResult", "NumericalHealthError", "generate_with_retry",
+    "STATUS_OK", "STATUS_NONFINITE", "STATUS_DEGRADED", "STATUS_TIMEOUT",
+    "STATUS_SHED",
+]

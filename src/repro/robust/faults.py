@@ -1,0 +1,188 @@
+"""Deterministic fault-injection harness for the serving stack.
+
+A ``FaultPlan`` is a *seeded, declarative* description of the faults a
+test (or a chaos drill) wants injected into one ``ServeEngine.generate``
+call: NaN/Inf/overscaled logits at a chosen decode step and lane, a host
+stall at a chosen step, and transient whole-call failures for exercising
+the retry wrapper.  Checkpoint corruption (truncated leaf, flipped bit,
+truncated manifest) operates on a committed checkpoint directory on disk,
+reading the manifest so the corrupted *parameter* is known by name.
+
+Design rules:
+
+  * ZERO overhead when disabled: the engine's decode loop holds a single
+    ``plan is not None`` check per hook; no plan, no extra work, and the
+    traced decode HLO is byte-identical (``tests/test_robustness.py``
+    proves it against the ``gemm_dispatches`` / ``int8_bounce_count``
+    guards).
+  * DETERMINISTIC: every random choice (bit-flip position) comes from a
+    ``numpy`` Generator seeded by the plan/argument seed, so a failing
+    fault run reproduces exactly.
+  * EXPLICIT hooks: faults are applied where the production code already
+    has a boundary (logits on the host loop, files on disk), never by
+    monkeypatching internals — what the harness proves is therefore what
+    production would do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_LOGIT_KINDS = ("nan", "inf", "ninf", "scale")
+
+
+class TransientServeError(RuntimeError):
+    """A retryable whole-request failure (the class of error the
+    retry/backoff wrapper in ``repro.robust.retry`` absorbs)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class LogitFault:
+    """Corrupt the logits a decode step's token is picked from.
+
+    ``step`` indexes the generated token (0 = the token picked from the
+    prefill logits); ``lanes`` are batch rows.  ``kind``:
+
+      * ``'nan'`` / ``'inf'`` / ``'ninf'``: poison the whole lane row —
+        the non-finite fault the finite-lane guard must quarantine;
+      * ``'scale'``: multiply the lane by ``scale`` — drives the
+        fixed-scale int8 saturation probe past its threshold without
+        leaving the finite domain (the graceful-degradation fault).
+    """
+
+    step: int
+    lanes: Tuple[int, ...]
+    kind: str = "nan"
+    scale: float = 64.0
+
+    def __post_init__(self):
+        if self.kind not in _LOGIT_KINDS:
+            raise ValueError(f"unknown logit-fault kind {self.kind!r}; "
+                             f"valid kinds are {_LOGIT_KINDS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class StallFault:
+    """Stall the host loop for ``seconds`` before decode step ``step`` —
+    the hung-host fault the per-request wall-clock budget must convert
+    into structured TIMEOUT statuses instead of an unbounded hang."""
+
+    step: int
+    seconds: float
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    seed: int = 0
+    logit_faults: Tuple[LogitFault, ...] = ()
+    stalls: Tuple[StallFault, ...] = ()
+    # raise TransientServeError for the first N generate() admissions
+    # (attempt counting survives across retries: the wrapper's backoff
+    # loop is what eventually gets through)
+    fail_first_generates: int = 0
+    enabled: bool = True
+    _attempts: int = dataclasses.field(default=0, repr=False)
+
+    # -- engine hooks ---------------------------------------------------------
+
+    def on_generate_start(self) -> None:
+        if self.enabled and self._attempts < self.fail_first_generates:
+            self._attempts += 1
+            raise TransientServeError(
+                f"injected transient failure (attempt {self._attempts} of "
+                f"{self.fail_first_generates} planned)")
+        self._attempts += 1
+
+    def maybe_stall(self, step: int, sleep=time.sleep) -> None:
+        if not self.enabled:
+            return
+        for f in self.stalls:
+            if f.step == step:
+                sleep(f.seconds)
+
+    def perturb_logits(self, step: int, logits: jnp.ndarray) -> jnp.ndarray:
+        """Apply every logit fault registered for ``step`` (host-side
+        copy-on-write: untouched steps return ``logits`` unchanged)."""
+        if not self.enabled:
+            return logits
+        hits = [f for f in self.logit_faults if f.step == step]
+        if not hits:
+            return logits
+        arr = np.array(logits, copy=True)
+        for f in hits:
+            for lane in f.lanes:
+                if f.kind == "nan":
+                    arr[lane, :] = np.nan
+                elif f.kind == "inf":
+                    arr[lane, :] = np.inf
+                elif f.kind == "ninf":
+                    arr[lane, :] = -np.inf
+                else:  # 'scale'
+                    arr[lane, :] *= f.scale
+        return jnp.asarray(arr)
+
+
+# -- on-disk checkpoint corruption -------------------------------------------
+#
+# These operate on a COMMITTED step directory (the post-rename layout the
+# CheckpointManager wrote) and return the name of the parameter they
+# corrupted, so tests can assert the structured restore error names it.
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _leaf_meta(ckpt_dir: str, step: int, leaf: int):
+    d = _step_dir(ckpt_dir, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        meta = json.load(f)["leaves"][leaf]
+    return d, meta, meta.get("param", meta["file"])
+
+
+def truncate_leaf(ckpt_dir: str, step: int, leaf: int = 0,
+                  keep_bytes: int = 16) -> str:
+    """Truncate a leaf file to ``keep_bytes`` (a half-written / torn leaf
+    after a crash that beat the fsync).  Returns the parameter name."""
+    d, meta, name = _leaf_meta(ckpt_dir, step, leaf)
+    path = os.path.join(d, meta["file"])
+    with open(path, "rb") as f:
+        data = f.read(keep_bytes)
+    with open(path, "wb") as f:
+        f.write(data)
+    return name
+
+
+def bitflip_leaf(ckpt_dir: str, step: int, leaf: int = 0,
+                 seed: int = 0) -> str:
+    """Flip one seeded-random bit in a leaf file's data section (silent
+    media corruption the crc32 must catch).  Returns the parameter name."""
+    d, meta, name = _leaf_meta(ckpt_dir, step, leaf)
+    path = os.path.join(d, meta["file"])
+    with open(path, "rb") as f:
+        data = bytearray(f.read())
+    rng = np.random.default_rng(seed)
+    # stay clear of the .npy header so the flip corrupts VALUES, which
+    # only the checksum (not the parser) can see
+    off = int(rng.integers(len(data) // 2, len(data)))
+    data[off] ^= 1 << int(rng.integers(0, 8))
+    with open(path, "wb") as f:
+        f.write(data)
+    return name
+
+
+def truncate_manifest(ckpt_dir: str, step: int, keep_bytes: int = 32) -> str:
+    """Truncate a step's manifest.json (torn metadata write): the step
+    still *lists* as present but must restore as structured corruption."""
+    path = os.path.join(_step_dir(ckpt_dir, step), "manifest.json")
+    with open(path, "rb") as f:
+        data = f.read(keep_bytes)
+    with open(path, "wb") as f:
+        f.write(data)
+    return "manifest.json"

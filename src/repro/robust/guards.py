@@ -1,0 +1,76 @@
+"""Numerical-health guards and the structured per-request result type.
+
+The serving engine's failure-isolation contract: one poisoned lane (a
+non-finite logit, a saturated int8 activation range) must never take down
+the batch.  The guards here are the *measurement* half of that contract —
+cheap per-lane probes computed in the SAME jitted dispatch as the token
+pick (see ``ServeEngine._pick_guarded``), so a guarded step costs one
+fused call exactly like an unguarded one — and ``GenerateResult`` is the
+*reporting* half: per-lane structured statuses instead of an exception or
+silently corrupt tokens.
+
+Status vocabulary (``GenerateResult.status`` per lane):
+
+  * ``ok``                     — decoded normally (EOS or token budget).
+  * ``quarantined_nonfinite``  — a NaN/Inf logit appeared; the lane was
+    frozen at that step (padded from then on) while its batch peers kept
+    decoding bitwise-unchanged.
+  * ``degraded_fp32``          — the int8 saturation probe tripped; the
+    lane finished decoding but its tokens came from the fp32 fallback
+    path from the following step on (only with
+    ``ServeConfig.fp32_fallback``; without it the status still records
+    the saturation so the caller can re-issue at fp32).
+  * ``timeout``                — the request's wall-clock budget expired
+    while the lane was still decoding (partial tokens are returned).
+  * ``shed``                   — admission control rejected the lane
+    (batch rows beyond ``ServeConfig.max_lanes``); no compute was spent.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+STATUS_OK = "ok"
+STATUS_NONFINITE = "quarantined_nonfinite"
+STATUS_DEGRADED = "degraded_fp32"
+STATUS_TIMEOUT = "timeout"
+STATUS_SHED = "shed"
+
+STATUSES = (STATUS_OK, STATUS_NONFINITE, STATUS_DEGRADED, STATUS_TIMEOUT,
+            STATUS_SHED)
+
+
+class NumericalHealthError(RuntimeError):
+    """Raised (only under ``ServeConfig(on_nonfinite='raise')``) when a
+    non-finite logit appears — for callers that prefer fail-stop over
+    per-lane quarantine."""
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    """Structured outcome of one ``ServeEngine.generate_with_status``.
+
+    ``tokens``     [B, n] generated ids (pad_id beyond a lane's fault /
+                   completion point; shed lanes are all-pad).
+    ``status``     length-B list of the statuses above.
+    ``fault_step`` [B] step index at which the lane left ``ok`` (-1 if it
+                   never did; 0 for shed lanes — rejected at admission).
+    ``n_steps``    decode steps actually executed.
+    ``timed_out``  True when the wall-clock budget ended the loop.
+    ``admitted``   lanes actually decoded (B - admitted were shed).
+    """
+
+    tokens: np.ndarray
+    status: list
+    fault_step: np.ndarray
+    n_steps: int
+    timed_out: bool = False
+    admitted: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return all(s == STATUS_OK for s in self.status)
+
+    def lanes_with(self, status: str) -> np.ndarray:
+        return np.flatnonzero(np.asarray(self.status, object) == status)

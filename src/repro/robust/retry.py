@@ -1,0 +1,48 @@
+"""Retry/backoff supervisor around ``ServeEngine.generate_with_status``.
+
+Production traffic sees transient failures (a preempted host step, a
+flaky interconnect op) that succeed on re-issue; the supervisor absorbs
+``TransientServeError`` with seedless deterministic exponential backoff
+and re-raises once the attempt budget is spent.  Hard failures
+(``NumericalHealthError`` under fail-stop config, programming errors)
+propagate immediately — retrying a deterministic fault only burns the
+wall-clock budget the request has left.
+
+The per-request wall-clock budget itself lives in
+``ServeConfig.request_timeout_s`` (enforced inside the decode loop, so a
+stalled host step surfaces as structured per-lane TIMEOUT statuses) and
+load shedding in ``ServeConfig.max_lanes``; this wrapper only adds the
+retry dimension on top.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.robust.faults import FaultPlan, TransientServeError
+from repro.robust.guards import GenerateResult
+
+
+def generate_with_retry(engine, batch, seed: int = 0, *,
+                        retries: int = 2, backoff_s: float = 0.05,
+                        fault_plan: FaultPlan = None,
+                        sleep=time.sleep) -> GenerateResult:
+    """Run ``engine.generate_with_status`` with up to ``retries`` retries
+    on ``TransientServeError``, doubling ``backoff_s`` between attempts.
+
+    ``sleep`` is injectable so tests assert the backoff schedule without
+    waiting it out.  Returns the first successful ``GenerateResult``.
+    """
+    if retries < 0:
+        raise ValueError(f"retries must be >= 0, got {retries}")
+    if backoff_s < 0:
+        raise ValueError(f"backoff_s must be >= 0, got {backoff_s}")
+    delay = backoff_s
+    for attempt in range(retries + 1):
+        try:
+            return engine.generate_with_status(batch, seed,
+                                               fault_plan=fault_plan)
+        except TransientServeError:
+            if attempt == retries:
+                raise
+            sleep(delay)
+            delay *= 2

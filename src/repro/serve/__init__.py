@@ -1,3 +1,3 @@
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ServeConfig, ServeEngine
 
-__all__ = ["ServeEngine"]
+__all__ = ["ServeEngine", "ServeConfig"]

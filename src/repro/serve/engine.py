@@ -1,13 +1,35 @@
 """Batched serving engine: prefill + decode over a fixed-shape batch slot
-("continuous batching lite": fixed batch lanes, per-lane completion).
+("continuous batching lite": fixed batch lanes, per-lane completion),
+hardened with per-lane numerical-health guards.
 
 The step functions are jit'd once per (batch, max_len); logits come back
 vocab-sharded over the model axis and are argmax'd shard-locally then
 combined — no full-vocab gather ever materializes on one device.
+
+Robustness contract (see ``docs/robustness.md`` for the fault model):
+
+  * one poisoned lane never takes down the batch: a NaN/Inf logit
+    quarantines THAT lane to a structured ``quarantined_nonfinite``
+    status while its peers keep decoding bitwise-unchanged;
+  * int8 decode degrades instead of corrupting: a fixed-scale saturation
+    probe (calibrated on the first decode logits) flags lanes whose
+    activation range drifted past the int8 envelope, and with
+    ``fp32_fallback`` their remaining tokens come from the retained
+    full-precision weights;
+  * a wall-clock budget (``request_timeout_s``) converts a hung host
+    step into per-lane ``timeout`` statuses with partial tokens;
+  * admission control (``max_lanes``) sheds surplus lanes at the door
+    with a ``shed`` status instead of overcommitting the batch slot.
+
+The guards ride INSIDE the jitted token pick (one fused dispatch per
+step either way), so the traced ``decode_step`` HLO is byte-identical
+with guards on/off and all PR 2-4 HLO invariants (single packed-QKV
+GEMM dispatch, zero int8 bounces, schedule determinism) are untouched.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -15,6 +37,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.lm import Model
+from repro.robust.guards import (
+    STATUS_DEGRADED,
+    STATUS_NONFINITE,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
+    GenerateResult,
+    NumericalHealthError,
+)
+
+_ON_NONFINITE = ("quarantine", "raise", "off")
 
 
 @dataclasses.dataclass
@@ -29,30 +62,114 @@ class ServeConfig:
     # epilogues — no fp32 dequant/requant bounce between GEMMs (the
     # paper's headline 14x-over-fp32 pipeline, §IV-C1).
     int8: bool = False
+    # -- robustness ----------------------------------------------------------
+    # per-lane health guards (finite logits; int8 saturation probe).
+    # Cost rides inside the jitted token pick — see the guard-overhead
+    # bench row; the traced decode HLO is identical either way.
+    guards: bool = True
+    # what a non-finite logit does: 'quarantine' the lane (structured
+    # per-request status, peers unaffected), 'raise' NumericalHealthError
+    # (fail-stop), or 'off' (pre-hardening behavior)
+    on_nonfinite: str = "quarantine"
+    # token id emitted for a lane past its quarantine/shed point
+    pad_id: int = 0
+    # dtype logits are sampled in (jit-cast before the pick)
+    logits_dtype: str = "float32"
+    # admission control: lanes beyond this are shed at the door (None =
+    # admit the whole batch, the pre-hardening behavior)
+    max_lanes: Optional[int] = None
+    # wall-clock budget per generate() call; on expiry running lanes get
+    # a structured 'timeout' status with their partial tokens (None = no
+    # budget)
+    request_timeout_s: Optional[float] = None
+    # int8 only: retain the fp32 weights and finish saturated lanes on
+    # them (memory cost: both copies live; off by default)
+    fp32_fallback: bool = False
+    # int8 only: per-lane fraction of logit values outside the calibrated
+    # int8 envelope above which the lane degrades
+    saturation_threshold: float = 0.25
+
+    def __post_init__(self):
+        # fail LOUDLY on bad values (mirrors XYZConfig's unknown-schedule
+        # ValueError): a serving config typo silently defaulting is the
+        # failure mode the validation exists to prevent
+        if self.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
+        if not (self.temperature >= 0.0):  # also rejects NaN
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.eos_id is not None and self.eos_id < 0:
+            raise ValueError(f"eos_id must be >= 0, got {self.eos_id}")
+        if self.pad_id < 0:
+            raise ValueError(f"pad_id must be >= 0, got {self.pad_id}")
+        if self.on_nonfinite not in _ON_NONFINITE:
+            raise ValueError(
+                f"unknown on_nonfinite {self.on_nonfinite!r}; valid "
+                f"modes are {_ON_NONFINITE}")
+        try:
+            dt = jnp.dtype(self.logits_dtype)
+        except TypeError as e:
+            raise ValueError(
+                f"unknown logits_dtype {self.logits_dtype!r}: {e}") from None
+        if not jnp.issubdtype(dt, jnp.floating):
+            raise ValueError(
+                f"logits_dtype must be a float dtype, got "
+                f"{self.logits_dtype!r}")
+        if self.max_lanes is not None and self.max_lanes < 1:
+            raise ValueError(
+                f"max_lanes must be >= 1 (or None), got {self.max_lanes}")
+        if self.request_timeout_s is not None \
+                and not (self.request_timeout_s > 0):
+            raise ValueError(
+                f"request_timeout_s must be > 0 (or None), got "
+                f"{self.request_timeout_s}")
+        if not (0.0 < self.saturation_threshold <= 1.0):
+            raise ValueError(
+                f"saturation_threshold must be in (0, 1], got "
+                f"{self.saturation_threshold}")
+        if self.fp32_fallback and not self.int8:
+            raise ValueError(
+                "fp32_fallback without int8 is meaningless: the engine "
+                "already serves full precision")
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, scfg: ServeConfig = ServeConfig()):
         self.model = model
+        self._fp_params = None
         if scfg.int8:
             # one-shot weight-quantization pass (idempotent): the fp
-            # weights are replaced, not duplicated — the engine holds one
-            # int8 copy plus f32 column scales
+            # weights are replaced, not duplicated — unless fp32_fallback
+            # asks the engine to keep them for saturated-lane degradation
+            fp = params
             params = model.quantize_params_for_serving(params)
+            if scfg.fp32_fallback:
+                self._fp_params = fp
         self.params = params
         self.scfg = scfg
+        self._ldtype = jnp.dtype(scfg.logits_dtype)
         self._prefill = jax.jit(
             lambda p, b, ml: model.prefill(p, b, max_len=ml),
             static_argnums=(2,))
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        # fp32 fallback decode: non-donating (it reads the cache the int8
+        # step subsequently consumes) and traced on the fp param tree
+        self._decode_fp = (jax.jit(model.decode_step)
+                           if self._fp_params is not None else None)
+        self._pick_guarded = jax.jit(self._pick_and_probe)
 
     @classmethod
     def from_checkpoint(cls, model: Model, ckpt_dir: str,
                         step: Optional[int] = None,
-                        scfg: ServeConfig = ServeConfig()) -> "ServeEngine":
+                        scfg: ServeConfig = ServeConfig(),
+                        fallback: bool = True) -> "ServeEngine":
         """Restore params onto the model's mesh and serve them.  Legacy
         checkpoints with unpacked wq/wk/wv leaves are packed into the
         ``wqkv`` schema in place (CheckpointManager migration).  With
+        ``fallback`` (the serving default) a checkpoint that fails
+        integrity verification is reported and the newest earlier intact
+        step is served instead — stale weights beat no weights.  With
         ``scfg.int8`` the restored weights immediately go through the
         one-shot serving quantization pass (see ``ServeEngine.__init__``);
         the fp checkpoint on disk is untouched."""
@@ -61,39 +178,184 @@ class ServeEngine:
         mgr = CheckpointManager(ckpt_dir)
         abstract, specs = param_io_specs(model)
         _, params = mgr.restore(step, abstract, mesh=model.mesh,
-                                specs=specs, defs=model.param_defs())
+                                specs=specs, defs=model.param_defs(),
+                                fallback=fallback)
         return cls(model, params, scfg)
 
-    def _pick(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+    # -- token pick + fused health probe --------------------------------------
+
+    def _pick_math(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         v = self.model.cfg.vocab
-        logits = logits[:, :v]
+        logits = logits[:, :v].astype(self._ldtype)
         if self.scfg.greedy:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         scaled = logits / max(self.scfg.temperature, 1e-6)
         return jax.random.categorical(key, scaled).astype(jnp.int32)
 
+    def _pick(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        return self._pick_math(logits, key)
+
+    def _pick_and_probe(self, logits, key, calib):
+        """Token pick + per-lane health probes in ONE jitted dispatch (the
+        guarded path costs one fused call, same as the unguarded pick):
+
+          finite  [B] — all-finite over the lane's real-vocab logits;
+          absmax  [B] — per-lane absmax (step-0 calibration source);
+          sat     [B] — fraction of the lane's logits that saturate a
+                        fixed int8 scale calibrated to ``calib`` (the
+                        quantize-epilogue saturation counter applied to
+                        the decode canary tensor).
+        """
+        from repro.kernels.quantize import (quantize_fixed_scale,
+                                            saturation_fraction)
+        v = self.model.cfg.vocab
+        real = logits[:, :v]
+        tok = self._pick_math(logits, key)
+        finite = jnp.all(jnp.isfinite(real), axis=-1)
+        absmax = jnp.max(jnp.abs(real), axis=-1)
+        scale = jnp.maximum(calib, 1e-6)[:, None] / 127.0
+        sat = saturation_fraction(quantize_fixed_scale(real, scale))
+        return tok, finite, absmax, sat
+
+    # -- generation ------------------------------------------------------------
+
     def generate(self, batch: Dict[str, jnp.ndarray], seed: int = 0
                  ) -> np.ndarray:
         """batch['tokens'] [B, S] -> generated tokens [B, <=max_new]."""
-        cfg, scfg = self.model.cfg, self.scfg
+        return self.generate_with_status(batch, seed).tokens
+
+    def generate_with_status(self, batch: Dict[str, jnp.ndarray],
+                             seed: int = 0,
+                             fault_plan=None) -> GenerateResult:
+        """Guarded generation with structured per-lane outcomes.
+
+        ``fault_plan`` (a ``repro.robust.FaultPlan``) injects
+        deterministic faults for testing; ``None`` (production) leaves
+        the loop on the exact pre-hardening compute path.
+        """
+        scfg = self.scfg
+        plan = fault_plan if (fault_plan is not None
+                              and fault_plan.enabled) else None
+        if plan is not None:
+            plan.on_generate_start()
+
+        # admission control: shed surplus lanes before any compute
+        b_full = batch["tokens"].shape[0]
+        admit = b_full if scfg.max_lanes is None \
+            else min(b_full, scfg.max_lanes)
+        if admit < b_full:
+            batch = {k: v[:admit] for k, v in batch.items()}
+
+        cfg = self.model.cfg
         b, s = batch["tokens"].shape
         prompt_len = s + (cfg.prefix_tokens or 0)
         max_len = prompt_len + scfg.max_new_tokens
         logits, cache = self._prefill(self.params, batch, max_len)
+        # the clock starts once prefill is dispatched: the budget bounds
+        # the decode loop (where a hung host step strands a request), not
+        # the one-time jit compile of a cold engine
+        deadline = (time.monotonic() + scfg.request_timeout_s
+                    if scfg.request_timeout_s is not None else None)
+
+        status = np.array([STATUS_OK] * admit, dtype=object)
+        fault_step = np.full((admit,), -1, np.int64)
+        done = np.zeros((admit,), bool)
+        degraded = np.zeros((admit,), bool)
+        timed_out = False
+        calib = None          # step-0 per-lane absmax (int8 probe)
+        fp_logits = None      # fp32-fallback logits for degraded lanes
+        out: List[np.ndarray] = []
 
         key = jax.random.PRNGKey(seed)
-        out: List[np.ndarray] = []
-        done = np.zeros((b,), bool)
-        tok = self._pick(logits, key)
+        pick_key = key  # token 0 samples with the unsplit key (legacy)
+        guards_on = scfg.guards and scfg.on_nonfinite != "off"
+        sat_on = scfg.guards and scfg.int8
+
         for i in range(scfg.max_new_tokens):
-            out.append(np.asarray(tok))
+            if plan is not None:
+                plan.maybe_stall(i)
+            if deadline is not None and time.monotonic() > deadline:
+                running = ~done
+                status[running] = STATUS_TIMEOUT
+                fault_step[running & (fault_step < 0)] = i
+                timed_out = True
+                break
+            if plan is not None:
+                logits = plan.perturb_logits(i, logits)
+
+            if guards_on or sat_on:
+                cal = (jnp.ones((admit,), jnp.float32) if calib is None
+                       else calib)
+                tok, fin_j, absmax_j, sat_j = self._pick_guarded(
+                    logits, pick_key, cal)
+                if guards_on:
+                    newly_bad = ~np.asarray(fin_j) & ~done
+                    if newly_bad.any():
+                        lanes = np.flatnonzero(newly_bad)
+                        if scfg.on_nonfinite == "raise":
+                            raise NumericalHealthError(
+                                f"non-finite logits at decode step {i} in "
+                                f"lanes {lanes.tolist()}")
+                        status[newly_bad] = STATUS_NONFINITE
+                        fault_step[newly_bad & (fault_step < 0)] = i
+                if sat_on:
+                    if calib is None:
+                        calib = jnp.maximum(absmax_j, 1e-6)
+                    else:
+                        sat = np.asarray(sat_j)
+                        newly_sat = ((sat > scfg.saturation_threshold)
+                                     & ~degraded & ~done
+                                     & np.asarray(fin_j))
+                        if newly_sat.any():
+                            degraded |= newly_sat
+                            mark = newly_sat & (status == STATUS_OK)
+                            status[mark] = STATUS_DEGRADED
+                            fault_step[mark & (fault_step < 0)] = i
+            else:
+                tok = self._pick(logits, pick_key)
+
+            if fp_logits is not None:
+                # degraded lanes pick from the fp32 fallback logits; the
+                # same key keeps healthy lanes bitwise unchanged
+                tok_fp = self._pick(fp_logits, pick_key)
+                tok = jnp.where(jnp.asarray(degraded), tok_fp, tok)
+
+            tok_np = np.asarray(tok)
+            quarantined = status == STATUS_NONFINITE
+            if quarantined.any():
+                tok_np = np.where(quarantined, scfg.pad_id,
+                                  tok_np).astype(tok_np.dtype)
+            out.append(tok_np)
             if scfg.eos_id is not None:
-                done |= np.asarray(tok) == scfg.eos_id
-                if done.all():
-                    break
+                done = done | (tok_np == scfg.eos_id)
+            done = done | quarantined
+            if done.all() or i == scfg.max_new_tokens - 1:
+                break
+
             pos = jnp.asarray(prompt_len + i, jnp.int32)
-            logits, cache = self._decode(self.params, cache, tok[:, None],
-                                         pos)
-            key, sub = jax.random.split(key)
-            tok = self._pick(logits, sub)
-        return np.stack(out, axis=1)
+            tok_dev = jnp.asarray(tok_np)[:, None]
+            if degraded.any() and self._decode_fp is not None:
+                # dispatched BEFORE the donating int8 step: it reads the
+                # cache buffers that step consumes
+                fp_logits, _ = self._decode_fp(self._fp_params, cache,
+                                               tok_dev, pos)
+            else:
+                fp_logits = None
+            logits, cache = self._decode(self.params, cache, tok_dev, pos)
+            key, pick_key = jax.random.split(key)
+
+        tokens = (np.stack(out, axis=1) if out
+                  else np.zeros((admit, 0), np.int32))
+        if admit < b_full:
+            shed = b_full - admit
+            full = np.full((b_full, tokens.shape[1]), scfg.pad_id,
+                           tokens.dtype)
+            full[:admit] = tokens
+            tokens = full
+            status = np.concatenate(
+                [status, np.array([STATUS_SHED] * shed, dtype=object)])
+            fault_step = np.concatenate(
+                [fault_step, np.zeros((shed,), np.int64)])
+        return GenerateResult(tokens=tokens, status=list(status),
+                              fault_step=fault_step, n_steps=len(out),
+                              timed_out=timed_out, admitted=admit)

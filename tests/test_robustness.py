@@ -1,0 +1,576 @@
+"""Fault-injection suite for the hardened serving stack.
+
+Every fault class the ``repro.robust`` harness can inject — NaN/Inf
+logits, int8 saturation, host stalls, transient whole-call failures,
+truncated/bit-flipped checkpoint files — must be either recovered or
+converted into a STRUCTURED per-request error.  The engine itself
+survives every drill, and healthy lanes decode bitwise-unchanged next to
+a poisoned one.
+
+Also proves the zero-overhead contract: with no ``FaultPlan`` the decode
+loop is on the exact pre-hardening compute path, the traced decode-step
+HLO is byte-identical with guards on/off, and the PR 2-4 HLO invariants
+(single packed-QKV GEMM dispatch, zero int8 bounces) still hold on the
+guarded engine.
+"""
+import dataclasses
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointCorruptionError, CheckpointManager
+from repro.configs import get_config
+from repro.launch.hlo_analysis import gemm_dispatches, int8_bounce_count
+from repro.launch.mesh import make_mesh
+from repro.models.lm import Model
+from repro.robust import (
+    STATUS_DEGRADED,
+    STATUS_NONFINITE,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
+    FaultPlan,
+    LogitFault,
+    NumericalHealthError,
+    StallFault,
+    TransientServeError,
+    bitflip_leaf,
+    generate_with_retry,
+    truncate_leaf,
+    truncate_manifest,
+)
+from repro.serve.engine import ServeConfig, ServeEngine
+
+ARCH = "internlm2-1.8b"
+PROMPT = 16
+NEW = 6
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh(1, 1)
+
+
+@pytest.fixture(scope="module")
+def model(mesh):
+    return Model(get_config(ARCH, smoke=True), mesh)
+
+
+@pytest.fixture(scope="module")
+def params(model):
+    return model.init_params(0)
+
+
+def _prompt(model, b=3):
+    v = model.cfg.vocab
+    return {"tokens": (jnp.arange(b * PROMPT, dtype=jnp.int32)
+                       .reshape(b, PROMPT) % v)}
+
+
+@pytest.fixture(scope="module")
+def engine(model, params):
+    return ServeEngine(model, params, ServeConfig(max_new_tokens=NEW))
+
+
+# ---------------------------------------------------------------------------
+# zero-overhead contract: guards change nothing on the healthy path
+# ---------------------------------------------------------------------------
+
+def test_guards_on_equals_guards_off_bitwise(model, params, engine):
+    off = ServeEngine(model, params,
+                      ServeConfig(max_new_tokens=NEW, guards=False))
+    p = _prompt(model)
+    np.testing.assert_array_equal(engine.generate(p), off.generate(p))
+
+
+def test_disabled_fault_plan_is_inert(model, engine):
+    """``FaultPlan(enabled=False)`` full of faults must be a bitwise
+    no-op — the kill switch for a chaos drill left on by accident."""
+    p = _prompt(model)
+    plan = FaultPlan(enabled=False,
+                     logit_faults=(LogitFault(step=1, lanes=(0,)),),
+                     stalls=(StallFault(step=0, seconds=100.0),),
+                     fail_first_generates=5)
+    base = engine.generate_with_status(p)
+    got = engine.generate_with_status(p, fault_plan=plan)
+    np.testing.assert_array_equal(got.tokens, base.tokens)
+    assert got.status == [STATUS_OK] * 3 and got.ok
+
+
+def test_decode_hlo_identical_with_and_without_guards(model, params):
+    """The guards live in the token-pick dispatch, never the model trace:
+    the traced decode-step HLO must be byte-identical either way."""
+    on = ServeEngine(model, params, ServeConfig(max_new_tokens=2))
+    off = ServeEngine(model, params,
+                      ServeConfig(max_new_tokens=2, guards=False))
+    batch = _prompt(model, b=2)
+    _, cache = jax.jit(lambda pr, b: model.prefill(pr, b, max_len=24))(
+        params, batch)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.asarray(PROMPT, jnp.int32)
+    hlo_on = on._decode.lower(params, cache, tok, pos).compile().as_text()
+    hlo_off = off._decode.lower(params, cache, tok, pos).compile().as_text()
+    assert hlo_on == hlo_off
+
+
+def test_guarded_int8_decode_keeps_hlo_invariants(mesh):
+    """PR 3/4 acceptance guards on the GUARDED engine's decode trace:
+    single packed-QKV GEMM dispatch, zero int8 fp32 bounces."""
+    cfg = dataclasses.replace(get_config(ARCH, smoke=True), d_ff=96)
+    packed_cols = cfg.q_dim + 2 * cfg.kv_dim
+    assert packed_cols not in (cfg.d_model, cfg.d_ff, cfg.padded_vocab())
+    model = Model(cfg, mesh)
+    eng = ServeEngine(model, model.init_params(0),
+                      ServeConfig(max_new_tokens=2, int8=True))
+    batch = {"tokens": jnp.zeros((2, PROMPT), jnp.int32)}
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, max_len=24))(
+        eng.params, batch)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    pos = jnp.asarray(PROMPT, jnp.int32)
+    hlo = eng._decode.lower(eng.params, cache, tok, pos).compile().as_text()
+    assert int8_bounce_count(hlo) == 0
+    assert gemm_dispatches(hlo, packed_cols) == 1
+
+
+# ---------------------------------------------------------------------------
+# non-finite logits: per-lane quarantine, peers bitwise-unchanged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["nan", "inf", "ninf"])
+def test_nonfinite_lane_quarantined_peers_unchanged(model, engine, kind):
+    p = _prompt(model)
+    base = engine.generate_with_status(p)
+    plan = FaultPlan(logit_faults=(
+        LogitFault(step=2, lanes=(1,), kind=kind),))
+    got = engine.generate_with_status(p, fault_plan=plan)
+
+    assert got.status[1] == STATUS_NONFINITE
+    assert got.fault_step[1] == 2
+    assert list(got.lanes_with(STATUS_NONFINITE)) == [1]
+    # the poisoned lane freezes at the fault step: its earlier tokens are
+    # intact, everything from the fault on is pad
+    np.testing.assert_array_equal(got.tokens[1, :2], base.tokens[1, :2])
+    assert np.all(got.tokens[1, 2:] == engine.scfg.pad_id)
+    # healthy lanes decode bitwise-unchanged next to the poisoned one
+    np.testing.assert_array_equal(got.tokens[0], base.tokens[0])
+    np.testing.assert_array_equal(got.tokens[2], base.tokens[2])
+    assert got.status[0] == got.status[2] == STATUS_OK
+
+
+def test_nonfinite_at_step_zero_hits_prefill_logits(model, engine):
+    plan = FaultPlan(logit_faults=(LogitFault(step=0, lanes=(0,)),))
+    got = engine.generate_with_status(_prompt(model), fault_plan=plan)
+    assert got.status[0] == STATUS_NONFINITE and got.fault_step[0] == 0
+    assert np.all(got.tokens[0] == engine.scfg.pad_id)
+    assert got.status[1] == STATUS_OK
+
+
+def test_on_nonfinite_raise_is_fail_stop(model, params):
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_new_tokens=NEW, on_nonfinite="raise"))
+    plan = FaultPlan(logit_faults=(LogitFault(step=1, lanes=(2,)),))
+    with pytest.raises(NumericalHealthError, match=r"step 1.*\[2\]"):
+        eng.generate_with_status(_prompt(model), fault_plan=plan)
+
+
+def test_on_nonfinite_off_restores_prehardening_behavior(model, params):
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_new_tokens=NEW, on_nonfinite="off"))
+    plan = FaultPlan(logit_faults=(LogitFault(step=1, lanes=(0,)),))
+    got = eng.generate_with_status(_prompt(model), fault_plan=plan)
+    # no quarantine: the lane keeps "decoding" through the poison (the
+    # pre-hardening failure mode, preserved behind an explicit opt-out)
+    assert got.status == [STATUS_OK] * 3
+
+
+# ---------------------------------------------------------------------------
+# int8 saturation: graceful degradation to the fp32 fallback
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def int8_engine(model, params):
+    return ServeEngine(model, params,
+                       ServeConfig(max_new_tokens=NEW, int8=True,
+                                   fp32_fallback=True))
+
+
+def test_saturation_degrades_lane_to_fp32(model, params, int8_engine):
+    p = _prompt(model, b=2)
+    base = int8_engine.generate_with_status(p)
+    assert base.ok
+    plan = FaultPlan(logit_faults=(
+        LogitFault(step=2, lanes=(0,), kind="scale", scale=100.0),))
+    got = int8_engine.generate_with_status(p, fault_plan=plan)
+
+    assert got.status[0] == STATUS_DEGRADED and got.fault_step[0] == 2
+    assert got.status[1] == STATUS_OK
+    # the degraded lane KEEPS decoding (tokens stay valid ids, no pad
+    # freeze) — degradation is a precision downgrade, not a quarantine
+    assert got.n_steps == NEW
+    v = model.cfg.vocab
+    assert np.all((got.tokens[0] >= 0) & (got.tokens[0] < v))
+    # pre-fault tokens are untouched, and the fault-step token too: the
+    # 'scale' fault multiplies the whole lane by a positive factor, which
+    # greedy argmax is invariant to — the probe, not the pick, trips
+    np.testing.assert_array_equal(got.tokens[0, :3], base.tokens[0, :3])
+    # its fallback tokens come from the retained fp32 weights: from the
+    # step after the trip they match the pure-fp32 engine's picks
+    fp = ServeEngine(model, params, ServeConfig(max_new_tokens=NEW))
+    fp_base = fp.generate_with_status(p)
+    np.testing.assert_array_equal(got.tokens[0, 3:], fp_base.tokens[0, 3:])
+    # the healthy lane is bitwise-unchanged vs the no-fault int8 run
+    np.testing.assert_array_equal(got.tokens[1], base.tokens[1])
+
+
+def test_saturation_without_fallback_still_reports(model, params):
+    """Without ``fp32_fallback`` the engine has no fp weights to degrade
+    to — the lane finishes on int8 but its status records the saturation
+    so the caller can re-issue the request at full precision."""
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_new_tokens=NEW, int8=True))
+    plan = FaultPlan(logit_faults=(
+        LogitFault(step=1, lanes=(1,), kind="scale", scale=100.0),))
+    got = eng.generate_with_status(_prompt(model, b=2), fault_plan=plan)
+    assert got.status[1] == STATUS_DEGRADED and got.fault_step[1] == 1
+    assert got.status[0] == STATUS_OK and got.n_steps == NEW
+
+
+# ---------------------------------------------------------------------------
+# wall-clock budget + admission control
+# ---------------------------------------------------------------------------
+
+def test_stalled_host_step_becomes_structured_timeout(model, params):
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_new_tokens=NEW,
+                                  request_timeout_s=0.25))
+    p = _prompt(model, b=2)
+    eng.generate(p)  # warm the jit caches so the budget bounds DECODE
+    plan = FaultPlan(stalls=(StallFault(step=2, seconds=0.4),))
+    got = eng.generate_with_status(p, fault_plan=plan)
+    assert got.timed_out
+    assert got.status == [STATUS_TIMEOUT] * 2
+    assert list(got.fault_step) == [2, 2]
+    # partial tokens up to the stall are returned, and they match the
+    # healthy run's prefix
+    assert got.n_steps == 2
+    base = eng.generate_with_status(p)
+    np.testing.assert_array_equal(got.tokens, base.tokens[:, :2])
+
+
+def test_admission_control_sheds_surplus_lanes(model, params):
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_new_tokens=NEW, max_lanes=2))
+    p = _prompt(model, b=4)
+    got = eng.generate_with_status(p)
+    assert got.admitted == 2
+    assert got.status == [STATUS_OK, STATUS_OK, STATUS_SHED, STATUS_SHED]
+    assert np.all(got.tokens[2:] == eng.scfg.pad_id)
+    # admitted lanes decode exactly as if the surplus never arrived
+    small = eng.generate_with_status({"tokens": p["tokens"][:2]})
+    np.testing.assert_array_equal(got.tokens[:2], small.tokens)
+
+
+# ---------------------------------------------------------------------------
+# retry/backoff supervisor
+# ---------------------------------------------------------------------------
+
+def test_retry_absorbs_transients_with_exponential_backoff(model, engine):
+    plan = FaultPlan(fail_first_generates=2)
+    slept = []
+    got = generate_with_retry(engine, _prompt(model), retries=2,
+                              backoff_s=0.01, fault_plan=plan,
+                              sleep=slept.append)
+    assert got.ok and got.n_steps == NEW
+    assert slept == [0.01, 0.02]
+
+
+def test_retry_budget_exhausted_reraises(model, engine):
+    plan = FaultPlan(fail_first_generates=3)
+    slept = []
+    with pytest.raises(TransientServeError):
+        generate_with_retry(engine, _prompt(model), retries=1,
+                            backoff_s=0.01, fault_plan=plan,
+                            sleep=slept.append)
+    assert slept == [0.01]
+
+
+def test_retry_does_not_absorb_hard_failures(model, params):
+    """A deterministic numerical fault is not transient: retrying it only
+    burns the request's budget, so it must propagate immediately."""
+    eng = ServeEngine(model, params,
+                      ServeConfig(max_new_tokens=NEW, on_nonfinite="raise"))
+    plan = FaultPlan(logit_faults=(LogitFault(step=0, lanes=(0,)),))
+    slept = []
+    with pytest.raises(NumericalHealthError):
+        generate_with_retry(eng, _prompt(model), retries=5,
+                            fault_plan=plan, sleep=slept.append)
+    assert slept == []
+
+
+def test_retry_parameter_validation(engine, model):
+    with pytest.raises(ValueError, match="retries"):
+        generate_with_retry(engine, _prompt(model), retries=-1)
+    with pytest.raises(ValueError, match="backoff_s"):
+        generate_with_retry(engine, _prompt(model), backoff_s=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# config + fault-plan validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kwargs,match", [
+    (dict(max_new_tokens=0), "max_new_tokens"),
+    (dict(temperature=-0.5), "temperature"),
+    (dict(temperature=float("nan")), "temperature"),
+    (dict(eos_id=-1), "eos_id"),
+    (dict(pad_id=-2), "pad_id"),
+    (dict(on_nonfinite="explode"), "on_nonfinite"),
+    (dict(logits_dtype="float999"), "logits_dtype"),
+    (dict(logits_dtype="int8"), "float dtype"),
+    (dict(max_lanes=0), "max_lanes"),
+    (dict(request_timeout_s=0.0), "request_timeout_s"),
+    (dict(saturation_threshold=0.0), "saturation_threshold"),
+    (dict(saturation_threshold=1.5), "saturation_threshold"),
+    (dict(fp32_fallback=True), "fp32_fallback"),
+])
+def test_serve_config_rejects_bad_values(kwargs, match):
+    with pytest.raises(ValueError, match=match):
+        ServeConfig(**kwargs)
+
+
+def test_logit_fault_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown logit-fault kind"):
+        LogitFault(step=0, lanes=(0,), kind="garbage")
+
+
+def test_fault_plan_hooks_are_deterministic_and_cheap():
+    plan = FaultPlan(stalls=(StallFault(step=3, seconds=7.5),))
+    slept = []
+    plan.maybe_stall(0, sleep=slept.append)
+    plan.maybe_stall(3, sleep=slept.append)
+    assert slept == [7.5]
+    # perturb_logits on a miss returns the SAME object (copy-on-write)
+    x = jnp.ones((2, 4))
+    assert plan.perturb_logits(0, x) is x
+
+
+# ---------------------------------------------------------------------------
+# checkpoint durability: async failures surface at sync points
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"w": {"a": np.arange(16, dtype=np.float32).reshape(4, 4),
+                  "b": np.ones((3,), np.float32)}}
+
+
+def _fail_second_leaf(monkeypatch):
+    import repro.checkpoint.manager as cm
+    real = cm._write_leaf
+    calls = {"n": 0}
+
+    def flaky(path, arr):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise OSError("disk full mid-leaf (injected)")
+        real(path, arr)
+    monkeypatch.setattr(cm, "_write_leaf", flaky)
+
+
+def test_async_writer_failure_reraised_at_wait(tmp_path, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path))
+    _fail_second_leaf(monkeypatch)
+    mgr.save(1, _tree())  # async: returns immediately, writer will die
+    with pytest.raises(OSError, match="disk full mid-leaf"):
+        mgr.wait()
+    # raised ONCE, then cleared: the next sync point is clean
+    mgr.wait()
+    # the failed step never committed (only a cleaned-up .tmp at worst)
+    assert mgr.all_steps() == []
+    monkeypatch.undo()
+    mgr.save(2, _tree())  # recovery: the next save succeeds
+    mgr.wait()
+    assert mgr.all_steps() == [2]
+
+
+def test_async_writer_failure_reraised_at_next_save(tmp_path, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path))
+    _fail_second_leaf(monkeypatch)
+    mgr.save(1, _tree())
+    mgr._thread.join()  # let the writer die (join alone never raises)
+    monkeypatch.undo()
+    with pytest.raises(OSError, match="disk full mid-leaf"):
+        mgr.save(2, _tree())  # save()'s entry wait() re-raises
+    mgr.save(2, _tree())
+    mgr.wait()
+    assert mgr.all_steps() == [2]
+
+
+def test_blocking_save_failure_raises_inline(tmp_path, monkeypatch):
+    mgr = CheckpointManager(str(tmp_path))
+    _fail_second_leaf(monkeypatch)
+    with pytest.raises(OSError, match="disk full mid-leaf"):
+        mgr.save(1, _tree(), blocking=True)
+
+
+def test_gc_never_deletes_inflight_step(tmp_path, monkeypatch):
+    """Retention must skip a step whose save is still in flight: a slow
+    writer paused right after its atomic rename (committed on disk,
+    still pending) survives a concurrent ``_gc`` that would otherwise
+    collect it, and becomes collectable the moment it retires."""
+    import repro.checkpoint.manager as cm
+    committed, release = threading.Event(), threading.Event()
+    real_rename = os.rename
+
+    def slow_rename(src, dst):
+        real_rename(src, dst)
+        if dst.endswith("step_00000001"):
+            committed.set()
+            assert release.wait(10)
+    monkeypatch.setattr(cm.os, "rename", slow_rename)
+
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(1, _tree())  # async; writer parks just past the commit
+    assert committed.wait(10)
+
+    # commit newer steps through a second manager (no shared pending set,
+    # generous keep: it must not collect anything itself)
+    other = CheckpointManager(str(tmp_path), keep=10)
+    other.save(2, _tree(), blocking=True)
+    other.save(3, _tree(), blocking=True)
+
+    mgr._gc()  # keep=1 would collect steps 1 and 2 — but 1 is pending
+    assert 1 in mgr.all_steps(), "gc deleted a step whose save is in flight"
+    assert 2 not in mgr.all_steps()
+
+    release.set()
+    mgr.wait()  # writer retires step 1, then runs its own gc (keep=1)
+    assert mgr.all_steps() == [3]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint corruption: structured errors + previous-step fallback
+# ---------------------------------------------------------------------------
+
+def test_truncated_leaf_is_structured_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree, blocking=True)
+    name = truncate_leaf(str(tmp_path), 1, leaf=0)
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        mgr.restore(1, tree)
+    # a torn leaf surfaces as OUR error naming the parameter, never a raw
+    # numpy parser error
+    assert ei.value.param == name and name in str(ei.value)
+    assert ei.value.step == 1 and "unreadable leaf file" in ei.value.reason
+
+
+def test_bitflipped_leaf_caught_by_checksum(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree, blocking=True)
+    name = bitflip_leaf(str(tmp_path), 1, leaf=1, seed=7)
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        mgr.restore(1, tree)
+    assert ei.value.param == name
+    assert "crc32 mismatch" in ei.value.reason
+
+
+def test_truncated_manifest_is_structured_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(1, tree, blocking=True)
+    truncate_manifest(str(tmp_path), 1)
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        mgr.restore(1, tree)
+    assert ei.value.param == "manifest.json"
+
+
+def test_fallback_restores_newest_earlier_intact_step(tmp_path, capsys):
+    mgr = CheckpointManager(str(tmp_path))
+    t1, t2 = _tree(), _tree()
+    t2["w"]["a"] = t2["w"]["a"] + 100.0
+    mgr.save(1, t1, blocking=True)
+    mgr.save(2, t2, blocking=True)
+    bitflip_leaf(str(tmp_path), 2, leaf=0)
+
+    step, got = mgr.restore(None, t1, fallback=True)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]["a"]), t1["w"]["a"])
+    assert "falling back" in capsys.readouterr().out
+    # without fallback the same corruption is fail-stop
+    with pytest.raises(CheckpointCorruptionError):
+        mgr.restore(2, t1)
+
+
+def test_fallback_exhausted_names_the_dead_end(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), blocking=True)
+    name = truncate_leaf(str(tmp_path), 1)
+    with pytest.raises(CheckpointCorruptionError,
+                       match="no earlier intact step") as ei:
+        mgr.restore(1, _tree(), fallback=True)
+    assert ei.value.param == name
+
+
+def test_serve_engine_falls_back_to_previous_intact_step(model, params,
+                                                         tmp_path):
+    """End-to-end: a serving restart pointed at a corrupted latest step
+    comes up on the previous intact one and produces a WORKING engine."""
+    mgr = CheckpointManager(str(tmp_path))
+    bumped = jax.tree.map(lambda x: x * 1.01, params)
+    mgr.save(1, params, blocking=True)
+    mgr.save(2, bumped, blocking=True)
+    bitflip_leaf(str(tmp_path), 2, leaf=0)
+
+    eng = ServeEngine.from_checkpoint(model, str(tmp_path),
+                                      scfg=ServeConfig(max_new_tokens=4))
+    p = _prompt(model, b=2)
+    want = ServeEngine(model, params,
+                       ServeConfig(max_new_tokens=4)).generate(p)
+    np.testing.assert_array_equal(eng.generate(p), want)
+
+    # the same restart WITHOUT fallback is fail-stop on the bad step
+    with pytest.raises(CheckpointCorruptionError):
+        ServeEngine.from_checkpoint(model, str(tmp_path), step=2,
+                                    scfg=ServeConfig(max_new_tokens=4),
+                                    fallback=False)
+
+
+# ---------------------------------------------------------------------------
+# saturation-probe primitives (kernels/quantize helpers)
+# ---------------------------------------------------------------------------
+
+def test_quantize_fixed_scale_clips_at_127():
+    from repro.kernels.quantize import quantize_fixed_scale
+    x = jnp.asarray([[0.0, 1.0, -1.0, 10.0, -10.0]], jnp.float32)
+    q = np.asarray(jax.jit(
+        lambda a: quantize_fixed_scale(a, jnp.asarray(1.0 / 127.0)))(x))
+    assert q.dtype == np.int8
+    np.testing.assert_array_equal(q[0], [0, 127, -127, 127, -127])
+
+
+def test_saturation_fraction_counts_clip_boundary():
+    from repro.kernels.quantize import saturation_fraction
+    q = jnp.asarray([[127, -127, 3, 0], [1, 2, 3, 4]], jnp.int8)
+    frac = np.asarray(saturation_fraction(q))
+    np.testing.assert_allclose(frac, [0.5, 0.0])
+
+
+def test_absmax_quantization_saturates_under_fixed_scale():
+    """The probe's physics: a tensor quantized at its own absmax scale
+    barely saturates; the same tensor against a 64x-too-small calibrated
+    scale saturates heavily — exactly the drift the serving guard trips
+    on."""
+    from repro.kernels.quantize import (quantize_fixed_scale,
+                                        saturation_fraction)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 256), jnp.float32)
+    own = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    calm = np.asarray(saturation_fraction(quantize_fixed_scale(x, own)))
+    hot = np.asarray(saturation_fraction(
+        quantize_fixed_scale(x * 64.0, own)))
+    assert np.all(calm < 0.05)
+    assert np.all(hot > 0.5)
