@@ -3,11 +3,12 @@
 # two can never drift (.github/workflows/ci.yml invokes these subcommands;
 # the env vars for every job live HERE, not in the workflow).
 #
-#   scripts/ci.sh             # everything (tier1 + multidev + bench + robustness)
+#   scripts/ci.sh             # everything (tier1 + multidev + bench + robustness + analyze)
 #   scripts/ci.sh tier1       # ROADMAP tier-1 pytest suite
 #   scripts/ci.sh multidev    # fake-8-device sharded checks
 #   scripts/ci.sh bench       # benchmark-regression gate (BENCH_ci.json)
 #   scripts/ci.sh robustness  # fault-injection suite + guard-overhead row
+#   scripts/ci.sh analyze     # HLO contract auditor vs HLO_CONTRACTS.json
 #
 # Dependency install is FULLY optional: the suite degrades gracefully
 # without the dev extras (property tests fall back to smoke subsets), and
@@ -90,6 +91,21 @@ robustness() {
         python benchmarks/serve_guard_overhead.py
 }
 
+analyze() {
+    # HLO contract auditor: trace every registered production path
+    # (train step, fp32/int8 prefill+decode, guarded decode, all four
+    # collective-matmul schedules), run the static-analysis passes, and
+    # diff against the committed HLO_CONTRACTS.json — any contract
+    # violation or unexplained structural drift fails.  audit.py forces
+    # 8 host devices itself (before jax init); JAX_PLATFORMS keeps the
+    # job CPU-only like the multidev job.  The --selftest pass proves
+    # the auditor still catches the three seeded regressions.
+    JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.launch.audit "$@"
+    JAX_PLATFORMS=cpu PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m repro.launch.audit --selftest
+}
+
 cmd="${1:-all}"
 [[ $# -gt 0 ]] && shift
 case "$cmd" in
@@ -97,6 +113,7 @@ case "$cmd" in
     multidev)   install_extras; multidev ;;
     bench)      install_extras; bench "$@" ;;
     robustness) install_extras; robustness ;;
-    all)        install_extras; tier1; multidev; bench; robustness ;;
-    *) echo "usage: scripts/ci.sh [tier1|multidev|bench|robustness|all]" >&2; exit 2 ;;
+    analyze)    install_extras; analyze "$@" ;;
+    all)        install_extras; tier1; multidev; bench; robustness; analyze ;;
+    *) echo "usage: scripts/ci.sh [tier1|multidev|bench|robustness|analyze|all]" >&2; exit 2 ;;
 esac

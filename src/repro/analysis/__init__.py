@@ -1,0 +1,52 @@
+"""Graph-based static analysis of traced HLO — the contract auditor.
+
+``hlo_graph``  — typed parser: instructions with operands / def-use
+                 edges, computations, module-level input/output aliasing,
+                 hardened while-loop trip-count extraction.
+``passes``     — the pass framework (``Finding``, ``run_passes``) and the
+                 four production passes:
+                   * collective-schedule checker (permutation validity,
+                     bidir-ring inverse rotations, barrier collectives on
+                     overlapped paths),
+                   * dtype-flow taint (int8 dequant bounces, f64 leaks,
+                     silent upcasts),
+                   * donation / aliasing audit (donated buffers actually
+                     aliased; full-tensor copies flagged),
+                   * dispatch counts (GEMM dispatch sites, apply-time
+                     weight concats).
+``contract``   — ``HloContract`` (a registered production trace plus its
+                 expectations), the production-trace registry, and the
+                 committed-baseline diff (``HLO_CONTRACTS.json``,
+                 bench-gate style: violations always fail, unexplained
+                 structural drift fails CI).
+
+``launch/hlo_analysis.py`` keeps its historical guard API
+(``gemm_dispatches`` / ``weight_concat_count`` / ``int8_bounce_count``)
+as thin shims over these passes; ``launch/audit.py`` is the CLI.
+"""
+from repro.analysis.hlo_graph import HloModule, parse_hlo
+from repro.analysis.passes import (
+    Finding,
+    PASSES,
+    collective_schedule_pass,
+    dispatch_count_pass,
+    donation_pass,
+    dtype_flow_pass,
+    run_passes,
+)
+from repro.analysis.contract import (
+    HloContract,
+    TraceReport,
+    diff_baseline,
+    production_contracts,
+    run_contract,
+)
+
+__all__ = [
+    "HloModule", "parse_hlo",
+    "Finding", "PASSES", "run_passes",
+    "collective_schedule_pass", "dtype_flow_pass", "donation_pass",
+    "dispatch_count_pass",
+    "HloContract", "TraceReport", "run_contract", "diff_baseline",
+    "production_contracts",
+]

@@ -1,0 +1,413 @@
+"""HLO contracts: every production trace, registered with its structural
+expectations and diffed against a committed baseline.
+
+An ``HloContract`` names one production program (the train step, the
+serving engine's decode step, one collective-matmul schedule cell...),
+knows how to trace it ABSTRACTLY (``jax.ShapeDtypeStruct`` lowering — no
+real weights, so the full registry audits in seconds), and declares the
+expectations the analysis passes enforce on the compiled module.
+
+``run_contract`` traces + parses + runs the passes; ``diff_baseline``
+compares the resulting reports against ``HLO_CONTRACTS.json`` exactly
+the way ``scripts/bench_gate.py`` gates timings against
+``BENCH_baseline.json``:
+
+  * ``error`` findings are contract VIOLATIONS — they fail regardless of
+    the baseline (a violated invariant is never "explained" by drift);
+  * metric or warning-signature changes vs the committed baseline are
+    structural DRIFT — they fail CI until a human re-seeds the baseline
+    with ``launch/audit.py --update-baseline`` (and the diff shows up in
+    review, which is the point);
+  * a contract that disappeared, or skipped for lack of devices when the
+    caller didn't allow it, is a coverage regression and fails.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.hlo_graph import parse_hlo
+from repro.analysis.passes import Finding, run_passes
+
+BASELINE_NAME = "HLO_CONTRACTS.json"
+
+
+@dataclasses.dataclass
+class HloContract:
+    """One registered production trace.
+
+    ``trace`` returns the OPTIMIZED HLO text (``.lower(...).compile()
+    .as_text()`` — donation and fusion decisions only exist post-
+    optimization).  ``expect`` is the pass expectation dict (see
+    ``repro.analysis.passes``).  ``extra_checks`` run after the passes
+    and contribute findings (e.g. the guard-invariance digest compare).
+    """
+    name: str
+    description: str
+    trace: Callable[[], str]
+    expect: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    requires_devices: int = 1
+    extra_checks: Tuple[Callable[[], List[Finding]], ...] = ()
+
+
+@dataclasses.dataclass
+class TraceReport:
+    contract: str
+    findings: List[Finding]
+    metrics: Dict[str, Any]
+    skipped: str = ""          # non-empty reason => not traced
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def finding_signature(self) -> Dict[str, int]:
+        """Baseline-diff key: finding occurrence counts by
+        severity:pass/code (locations stay out — instruction names churn
+        with XLA versions, structure shouldn't)."""
+        sig: Dict[str, int] = {}
+        for f in self.findings:
+            key = f"{f.severity}:{f.pass_name}/{f.code}"
+            sig[key] = sig.get(key, 0) + 1
+        return sig
+
+    def format(self) -> str:
+        lines = [f"== {self.contract} =="]
+        if self.skipped:
+            lines.append(f"   SKIPPED: {self.skipped}")
+            return "\n".join(lines)
+        for k in sorted(self.metrics):
+            lines.append(f"   {k} = {self.metrics[k]}")
+        for f in self.findings:
+            lines.append(f"   {f.format()}")
+        if not self.findings:
+            lines.append("   no findings")
+        return "\n".join(lines)
+
+
+def run_contract(contract: HloContract) -> TraceReport:
+    import jax
+    n = len(jax.devices())
+    if n < contract.requires_devices:
+        return TraceReport(
+            contract.name, [], {},
+            skipped=f"needs {contract.requires_devices} devices, "
+                    f"have {n} (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count="
+                    f"{contract.requires_devices})")
+    module = parse_hlo(contract.trace())
+    findings, metrics = run_passes(module, contract.expect)
+    for check in contract.extra_checks:
+        findings.extend(check())
+    return TraceReport(contract.name, findings, metrics)
+
+
+# ---------------------------------------------------------------------------
+# baseline diff (pure, unit-tested — mirrors bench_gate.compare)
+# ---------------------------------------------------------------------------
+
+def to_baseline(reports: Sequence[TraceReport]) -> Dict[str, Any]:
+    """The committed-baseline payload for these reports (skipped
+    contracts are omitted — seed the baseline on a host with enough
+    devices, i.e. through ``launch/audit.py`` which forces 8)."""
+    return {"contracts": {
+        r.contract: {"metrics": r.metrics,
+                     "findings": r.finding_signature()}
+        for r in reports if not r.skipped}}
+
+
+def diff_baseline(reports: Sequence[TraceReport],
+                  baseline: Optional[Dict[str, Any]],
+                  allow_device_skips: bool = False
+                  ) -> Tuple[List[str], List[str]]:
+    """Returns (failures, report lines).  ``baseline=None`` means no
+    committed file: violations still fail, drift can't be judged."""
+    failures: List[str] = []
+    lines: List[str] = []
+    base = (baseline or {}).get("contracts", {})
+
+    for r in reports:
+        if r.skipped:
+            if allow_device_skips:
+                lines.append(f"skip {r.contract}: {r.skipped}")
+            else:
+                failures.append(
+                    f"SKIPPED contract {r.contract} ({r.skipped}) — "
+                    f"coverage regression; rerun with enough devices or "
+                    f"pass --allow-device-skips for a local spot check")
+                lines.append(f"FAIL {r.contract}: skipped")
+            continue
+        for f in r.errors:
+            failures.append(f"VIOLATION {r.contract}: {f.format()}")
+        if baseline is None:
+            lines.append(f"new  {r.contract}: no baseline to diff")
+            continue
+        if r.contract not in base:
+            failures.append(
+                f"NEW contract {r.contract} has no committed baseline — "
+                f"reseed with --update-baseline")
+            lines.append(f"FAIL {r.contract}: not in baseline")
+            continue
+        entry = base[r.contract]
+        drift: List[str] = []
+        bm = entry.get("metrics", {})
+        for k in sorted(set(bm) | set(r.metrics)):
+            if bm.get(k) != r.metrics.get(k):
+                drift.append(f"{k}: {bm.get(k)!r} -> {r.metrics.get(k)!r}")
+        bf = entry.get("findings", {})
+        sig = r.finding_signature()
+        for k in sorted(set(bf) | set(sig)):
+            if bf.get(k, 0) != sig.get(k, 0):
+                drift.append(f"finding {k}: x{bf.get(k, 0)} -> "
+                             f"x{sig.get(k, 0)}")
+        if drift:
+            failures.append(
+                f"DRIFT {r.contract}: " + "; ".join(drift)
+                + " — structural change; if intended, reseed with "
+                  "--update-baseline")
+            lines.append(f"FAIL {r.contract}: structural drift "
+                         f"({len(drift)} fields)")
+        else:
+            status = "ok  " if not r.errors else "FAIL"
+            lines.append(f"{status} {r.contract}: matches baseline "
+                         f"({len(r.metrics)} metrics, "
+                         f"{len(r.findings)} findings)")
+
+    traced = {r.contract for r in reports if not r.skipped}
+    skipped = {r.contract for r in reports if r.skipped}
+    for name in sorted(set(base) - traced - skipped):
+        failures.append(f"MISSING contract {name} (present in baseline) "
+                        f"— a silently dropped trace is a coverage "
+                        f"regression")
+        lines.append(f"FAIL {name}: missing from this run")
+    return failures, lines
+
+
+# ---------------------------------------------------------------------------
+# the production registry
+# ---------------------------------------------------------------------------
+
+_SMOKE_B, _SMOKE_S, _SMOKE_NEW = 2, 16, 8
+
+
+def _smoke_cfg():
+    import dataclasses as dc
+    from repro.configs import get_config
+    # d_ff=96 keeps the packed-QKV width unique in the module (the smoke
+    # config's d_ff collides with q_dim + 2*kv_dim — the same move
+    # tests/test_int8_serving.py makes)
+    return dc.replace(get_config("internlm2-1.8b", smoke=True), d_ff=96)
+
+
+def production_contracts() -> List[HloContract]:
+    """Every traced production path, with its declared expectations.
+
+    Model/mesh construction happens lazily inside each ``trace`` closure
+    (first jax touch is deferred to ``run_contract`` time); only
+    shape/leaf-count bookkeeping runs here.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config  # noqa: F401  (doc pointer)
+    from repro.core.maxeva_matmul import (XYZConfig, schedule_wire_ops,
+                                          xyz_weight_shape)
+
+    cfg = _smoke_cfg()
+    packed = cfg.q_dim + 2 * cfg.kv_dim
+    assert packed not in (cfg.d_model, cfg.d_ff, cfg.padded_vocab())
+    b, s, new = _SMOKE_B, _SMOKE_S, _SMOKE_NEW
+    max_len = s + new
+
+    def _model():
+        from repro.launch.mesh import make_mesh
+        from repro.models.lm import Model
+        return Model(cfg, make_mesh(1, 1))
+
+    # expectations shared by every single-device production path: the
+    # trace must be f64-free (the f64 consistency REFERENCE never leaks
+    # into production programs) and collective-free (model axis of 1)
+    single_dev = {"forbid_f64": True, "allowed_collectives": ()}
+
+    def trace_train():
+        from repro.optim import AdamWConfig, abstract_opt_state
+        from repro.train.step import jit_train_step
+        model = _model()
+        opt_cfg = AdamWConfig()
+        aparams = model.abstract_params()
+        aopt = abstract_opt_state(aparams, opt_cfg)
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                 "targets": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        step = jit_train_step(model, opt_cfg, donate=True)
+        return step.lower(aparams, aopt, batch).compile().as_text()
+
+    def train_donated() -> Tuple[int, ...]:
+        from repro.optim import AdamWConfig, abstract_opt_state
+        model = _model()
+        aparams = model.abstract_params()
+        aopt = abstract_opt_state(aparams, AdamWConfig())
+        n = (len(jax.tree_util.tree_leaves(aparams))
+             + len(jax.tree_util.tree_leaves(aopt)))
+        return tuple(range(n))
+
+    def trace_prefill(int8: bool):
+        def tr():
+            model = _model()
+            aparams = model.abstract_params()
+            if int8:
+                aparams = jax.eval_shape(
+                    model.quantize_params_for_serving, aparams)
+            abatch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+            fn = jax.jit(lambda p, bb: model.prefill(p, bb,
+                                                     max_len=max_len))
+            return fn.lower(aparams, abatch).compile().as_text()
+        return tr
+
+    def serve_cfg(**kw):
+        from repro.serve.engine import ServeConfig
+        return ServeConfig(max_new_tokens=new, **kw)
+
+    def trace_decode(scfg_kw: Dict[str, Any]):
+        def tr():
+            from repro.serve.engine import ServeEngine
+            lowered, _ = ServeEngine.decode_step_lowered(
+                _model(), serve_cfg(**scfg_kw), b, s)
+            return lowered.compile().as_text()
+        return tr
+
+    def decode_donated(int8: bool) -> Tuple[int, ...]:
+        # the donated cache leaves' parameter numbers sit AFTER the param
+        # leaves — and the quantized tree has more leaves than the fp one
+        # (each projection weight flattens to q + scale), so the numbers
+        # are computed per serving mode
+        model = _model()
+        aparams = model.abstract_params()
+        if int8:
+            aparams = jax.eval_shape(model.quantize_params_for_serving,
+                                     aparams)
+        n_p = len(jax.tree_util.tree_leaves(aparams))
+        n_c = len(jax.tree_util.tree_leaves(
+            model.abstract_cache(b, max_len)))
+        return tuple(range(n_p, n_p + n_c))
+
+    donated_cache = decode_donated(int8=False)
+
+    def guard_invariance() -> List[Finding]:
+        """Health guards must never alter the traced decode step: the
+        engine-built decode program with guards on and with guards off
+        must be byte-identical (the serve_guard_overhead bench asserts
+        this dynamically; the auditor pins it structurally)."""
+        from repro.serve.engine import ServeEngine
+        model = _model()
+        on, _ = ServeEngine.decode_step_lowered(
+            model, serve_cfg(), b, s)
+        off, _ = ServeEngine.decode_step_lowered(
+            model, serve_cfg(guards=False, on_nonfinite="off"), b, s)
+        if on.compile().as_text() != off.compile().as_text():
+            return [Finding(
+                "contract", "guards-changed-decode-hlo", "error",
+                "decode_guarded",
+                "decode-step HLO differs with guards on vs off — the "
+                "guards contract requires the traced step to be "
+                "byte-identical")]
+        return []
+
+    decode_expect = dict(single_dev, gemm_out_cols=packed,
+                         expect_gemm_dispatches=1,
+                         d_model=cfg.d_model, expect_weight_concats=0,
+                         donated_params=donated_cache)
+
+    contracts = [
+        HloContract(
+            "train_step",
+            "jit_train_step on the smoke config: fwd+bwd+AdamW, params "
+            "and opt state donated",
+            trace_train,
+            expect=dict(single_dev, d_model=cfg.d_model,
+                        expect_weight_concats=0,
+                        donated_params=train_donated())),
+        HloContract(
+            "prefill_fp32",
+            "serving prefill (fp32 weights), decode headroom reserved",
+            trace_prefill(int8=False),
+            expect=dict(single_dev, gemm_out_cols=packed,
+                        d_model=cfg.d_model, expect_weight_concats=0)),
+        HloContract(
+            "decode_fp32",
+            "engine decode step, fp32, guards off, KV cache donated",
+            trace_decode(dict(guards=False, on_nonfinite="off")),
+            expect=decode_expect),
+        HloContract(
+            "decode_guarded",
+            "engine decode step under the production guarded config — "
+            "must be byte-identical to decode_fp32",
+            trace_decode({}),
+            expect=decode_expect,
+            extra_checks=(guard_invariance,)),
+        HloContract(
+            "prefill_int8",
+            "serving prefill on one-shot-quantized weights: zero fp32 "
+            "dequant bounces",
+            trace_prefill(int8=True),
+            expect=dict(single_dev, int8_clean=True,
+                        gemm_out_cols=packed, d_model=cfg.d_model,
+                        expect_weight_concats=0)),
+        HloContract(
+            "decode_int8",
+            "engine int8 decode step: zero bounces, single packed-QKV "
+            "dispatch, KV cache donated",
+            trace_decode(dict(int8=True)),
+            expect=dict(decode_expect, int8_clean=True,
+                        donated_params=decode_donated(int8=True))),
+    ]
+
+    # -- collective-matmul schedule cells (8 fake devices, mesh 2x4) -------
+    xb, xs, xk, xn = 4, 8, 32, 64
+    model_axis = 4
+
+    def trace_xyz(xcfg: XYZConfig):
+        def tr():
+            from repro.core.maxeva_matmul import xyz_matmul
+            from repro.launch.mesh import make_mesh
+            mesh = make_mesh(2, model_axis)
+            x = jax.ShapeDtypeStruct((xb, xs, xk), jnp.float32)
+            w = jax.ShapeDtypeStruct(
+                xyz_weight_shape(xk, xn, model_axis, xcfg.y), jnp.float32)
+            fn = jax.jit(lambda xa, wa: xyz_matmul(xa, wa, mesh=mesh,
+                                                   cfg=xcfg))
+            return fn.lower(x, w).compile().as_text()
+        return tr
+
+    for sched in ("allreduce", "reduce_scatter", "ring", "bidir_ring"):
+        # ksharded Y=2 Z=2: the overlapped-gather path — NO barrier
+        # all-gather allowed on any of the four schedules (the ROADMAP
+        # invariant the auditor now owns)
+        xcfg = XYZConfig(y=2, schedule=sched, x_layout="ksharded")
+        allowed = schedule_wire_ops(xcfg, model_axis)
+        assert "all-gather" not in allowed
+        contracts.append(HloContract(
+            f"xyz_{sched}_ksharded_y2",
+            f"collective matmul, schedule={sched}, ksharded X, Y=2 Z=2 "
+            f"on mesh(2,4): overlapped ppermute gather, no barrier "
+            f"all-gather",
+            trace_xyz(xcfg),
+            expect={"allowed_collectives": allowed,
+                    "forbid_f64": True,
+                    "require_inverse_permutes": sched == "bidir_ring"},
+            requires_devices=8))
+
+    # bidir_ring at Y=4 (full model axis): rotations +/-s are distinct
+    # maps, so the inverse-rotation pairing check has teeth
+    xcfg4 = XYZConfig(y=4, schedule="bidir_ring", x_layout="replicated")
+    contracts.append(HloContract(
+        "xyz_bidir_ring_replicated_y4",
+        "bidir_ring at Y=4: opposite-rotation ppermute sets must be "
+        "exact inverses",
+        trace_xyz(xcfg4),
+        expect={"allowed_collectives": schedule_wire_ops(xcfg4,
+                                                         model_axis),
+                "forbid_f64": True,
+                "require_inverse_permutes": True},
+        requires_devices=8))
+
+    return contracts

@@ -1,0 +1,417 @@
+"""Analysis passes over the typed HLO graph.
+
+Each pass walks an ``HloModule`` under a per-contract expectation dict
+and returns ``(findings, metrics)``:
+
+  * findings — structural defects.  ``severity='error'`` findings fail
+    the auditor unconditionally (a violated contract); ``'warning'``
+    findings are reported and baseline-diffed but don't fail on their
+    own.
+  * metrics — deterministic structural counts (dispatch sites, bounce
+    counts, per-collective op counts, aliased-buffer counts) that the
+    auditor diffs against the committed ``HLO_CONTRACTS.json`` baseline:
+    unexplained drift fails CI even when no expectation is violated,
+    exactly like the bench gate's committed medians.
+
+Expectation keys (all optional — a pass only enforces what the contract
+declares):
+
+  allowed_collectives   tuple of collective op names the planner priced
+                        on this path; any OTHER collective is a barrier
+                        the overlap model never saw -> error
+  require_inverse_permutes  every rotation ppermute set must have its
+                        exact inverse in the module (the bidir_ring
+                        opposite-rotation contract) -> error if missing
+  int8_clean            s8->float dequants reaching a dot are errors
+                        (else info findings + a metric)
+  forbid_f64            any f64-typed instruction or float upcast to f64
+                        is an error (fp32-path contracts)
+  donated_params        parameter numbers that MUST be aliased into the
+                        output (donate_argnums buffers) -> error if not
+  gemm_out_cols         result-column width identifying the audited GEMM
+  expect_gemm_dispatches  exact dot-site count at gemm_out_cols
+  d_model               weight K dimension for the concat detector
+  expect_weight_concats   exact apply-time weight-concat count
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+from repro.analysis.hlo_graph import (
+    FLOAT_DTYPES,
+    DTYPE_BYTES,
+    HloModule,
+    Instruction,
+    normalize_shape,
+    shape_info,
+)
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter",
+                  "all-to-all", "collective-permute", "ragged-all-to-all")
+# collectives with a synchronization barrier: every participant must
+# arrive before any data moves (ppermute hops are point-to-point)
+BARRIER_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    pass_name: str
+    code: str          # stable slug, the baseline-diff key
+    severity: str      # 'error' | 'warning' | 'info'
+    where: str         # 'computation/instruction'
+    message: str
+
+    def format(self) -> str:
+        return (f"[{self.severity.upper():7s}] {self.pass_name}"
+                f"/{self.code} at {self.where}: {self.message}")
+
+
+def _collective_base(ins: Instruction) -> Optional[str]:
+    """Base collective op name, folding async -start/-done forms (the
+    -done half is skipped: one logical collective, one count)."""
+    op = ins.op
+    if op.endswith("-done"):
+        return None
+    if op.endswith("-start"):
+        op = op[:-6]
+    return op if op in COLLECTIVE_OPS else None
+
+
+# ---------------------------------------------------------------------------
+# pass 1: collective-schedule checker
+# ---------------------------------------------------------------------------
+
+def collective_schedule_pass(module: HloModule, expect: Dict[str, Any]
+                             ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """The repo's analog of a race detector for the wire schedule.
+
+    * every ``collective-permute`` source-target list must be a valid
+      permutation (unique sources, unique targets, equal participant
+      sets) — a malformed rotation deadlocks or drops a contribution;
+    * under ``require_inverse_permutes`` (the bidir_ring contract) every
+      rotation set must have its exact inverse map present — the two
+      opposite-direction ppermute sets of ``_bidir_ring_collective_matmul``;
+    * under ``allowed_collectives`` any other collective is a barrier on
+      a path the planner priced as overlapped (``est_step_s`` hides
+      ring-family wire time under chunk GEMMs; a barrier all-gather
+      serializes it) -> error.
+    """
+    findings: List[Finding] = []
+    counts: Dict[str, int] = {}
+    permute_maps: List[Dict[int, int]] = []
+    permute_sites: List[str] = []
+    allowed = expect.get("allowed_collectives")
+
+    for cname, ins in module.instructions():
+        base = _collective_base(ins)
+        if base is None:
+            continue
+        where = f"{cname}/{ins.name}"
+        counts[base] = counts.get(base, 0) + 1
+        if base == "collective-permute":
+            pairs = ins.source_target_pairs or []
+            srcs = [a for a, _ in pairs]
+            tgts = [b for _, b in pairs]
+            if len(set(srcs)) != len(srcs) or len(set(tgts)) != len(tgts) \
+                    or set(srcs) != set(tgts):
+                findings.append(Finding(
+                    "collective-schedule", "invalid-permutation", "error",
+                    where,
+                    f"source_target_pairs {pairs} is not a permutation "
+                    f"(duplicate or mismatched endpoints)"))
+            else:
+                permute_maps.append(dict(pairs))
+                permute_sites.append(where)
+        if allowed is not None and base not in allowed:
+            sev = "error" if base in BARRIER_OPS else "warning"
+            findings.append(Finding(
+                "collective-schedule", f"barrier-{base}", sev, where,
+                f"{base} of {ins.shape} on a path the planner priced as "
+                f"overlapped (allowed: {tuple(allowed)})"))
+
+    inverse_paired = 0
+    if permute_maps:
+        inv_index = {tuple(sorted((t, s) for s, t in m.items()))
+                     for m in permute_maps}
+        for m, where in zip(permute_maps, permute_sites):
+            key = tuple(sorted(m.items()))
+            if key in inv_index:
+                inverse_paired += 1
+            elif expect.get("require_inverse_permutes"):
+                findings.append(Finding(
+                    "collective-schedule", "missing-inverse-rotation",
+                    "error", where,
+                    f"rotation {dict(m)} has no exact-inverse partner "
+                    f"(bidir_ring ships each half-chunk on opposite "
+                    f"rotation sets)"))
+
+    metrics = {"collective_ops": counts,
+               "n_permutes": len(permute_maps),
+               "inverse_paired_permutes": inverse_paired}
+    return findings, metrics
+
+
+# ---------------------------------------------------------------------------
+# pass 2: dtype-flow taint
+# ---------------------------------------------------------------------------
+
+def _taint_dequants(module: HloModule) -> Set[Tuple[str, str]]:
+    """Forward taint propagation: seed at every s8 -> float ``convert``
+    (a dequantization), flow through def-use edges, across call sites
+    into callee parameters, and from dirty callees back to call-site
+    results.  Returns the set of (computation, dot name) sites consuming
+    a tainted operand — the fp32 bounces.
+
+    Conservative across calls (any tainted operand taints every callee
+    parameter; any tainted callee taints the call result), which can
+    only over-count — safe for a zero-bounce gate.  This is the fixpoint
+    the legacy ``int8_bounce_count`` ran over raw regex tables, now on
+    the typed graph.
+    """
+    comps = module.computations
+    tainted: Dict[str, Set[str]] = {c: set() for c in comps}
+    comp_dirty: Dict[str, bool] = {c: False for c in comps}
+    bounces: Set[Tuple[str, str]] = set()
+
+    changed = True
+    while changed:
+        changed = False
+        for cname, comp in comps.items():
+            for ins in comp.instructions:
+                hit = ins.name in tainted[cname]
+                if not hit:
+                    if ins.op == "convert" and ins.dtype in FLOAT_DTYPES \
+                            and ins.operands:
+                        opshape = comp.shape_of(ins.operands[0])
+                        if opshape is not None and \
+                                opshape.lstrip("%").startswith("s8["):
+                            hit = True
+                    if not hit and any(o in tainted[cname]
+                                       for o in ins.operands):
+                        hit = True
+                    if not hit and any(comp_dirty.get(sub)
+                                       for sub in ins.called):
+                        hit = True
+                    if hit:
+                        tainted[cname].add(ins.name)
+                        comp_dirty[cname] = True
+                        changed = True
+                # tainted operands taint every parameter of the callee
+                if any(o in tainted[cname] for o in ins.operands):
+                    for sub in ins.called:
+                        callee = comps.get(sub)
+                        if callee is None:
+                            continue
+                        for p in callee.params.values():
+                            if p.name not in tainted[sub]:
+                                tainted[sub].add(p.name)
+                                comp_dirty[sub] = True
+                                changed = True
+                if ins.op == "dot" and any(o in tainted[cname]
+                                           for o in ins.operands):
+                    bounces.add((cname, ins.name))
+    return bounces
+
+
+def dtype_flow_pass(module: HloModule, expect: Dict[str, Any]
+                    ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Dtype taint & width audit.
+
+    * int8 bounces: a dequantized (s8 -> float) value reaching any
+      ``dot`` — the fp32 round trip the end-to-end int8 path must not
+      contain (error under ``int8_clean``);
+    * f64 leaks: any f64-typed instruction on a path contracted fp32
+      (the f64 consistency REFERENCE must never leak into production
+      traces) — error under ``forbid_f64``;
+    * silent upcasts: a float -> wider-float ``convert`` landing at f64
+      (error under ``forbid_f64``; bf16 -> f32 promotion is the normal
+      epilogue accumulate and stays a metric).
+    """
+    findings: List[Finding] = []
+    bounces = sorted(_taint_dequants(module))
+    int8_sev = "error" if expect.get("int8_clean") else "info"
+    for cname, dname in bounces:
+        findings.append(Finding(
+            "dtype-flow", "int8-bounce", int8_sev, f"{cname}/{dname}",
+            "dot consumes a dequantized int8 tensor (fp32 dequant -> "
+            "requant round trip; keep GEMM inputs int8 and re-apply "
+            "scales on the int32 accumulator)"))
+
+    f64_count = 0
+    widening_converts = 0
+    for cname, ins in module.instructions():
+        if ins.op == "parameter":
+            continue
+        if ins.dtype == "f64":
+            f64_count += 1
+            if expect.get("forbid_f64"):
+                findings.append(Finding(
+                    "dtype-flow", "f64-leak", "error",
+                    f"{cname}/{ins.name}",
+                    f"f64 {ins.op} ({ins.shape}) on an fp32-contracted "
+                    f"path"))
+        if ins.op == "convert" and ins.dtype in FLOAT_DTYPES \
+                and ins.operands:
+            src = module.computations[cname].shape_of(ins.operands[0])
+            src_dt = src.lstrip("%").split("[")[0] if src else ""
+            if src_dt in FLOAT_DTYPES and \
+                    DTYPE_BYTES[ins.dtype] > DTYPE_BYTES[src_dt]:
+                widening_converts += 1
+                if ins.dtype == "f64" and expect.get("forbid_f64"):
+                    findings.append(Finding(
+                        "dtype-flow", "silent-upcast", "error",
+                        f"{cname}/{ins.name}",
+                        f"silent {src_dt} -> f64 upcast"))
+
+    metrics = {"int8_bounce_count": len(bounces),
+               "f64_instruction_count": f64_count,
+               "float_widening_converts": widening_converts}
+    return findings, metrics
+
+
+# ---------------------------------------------------------------------------
+# pass 3: donation / aliasing audit
+# ---------------------------------------------------------------------------
+
+def donation_pass(module: HloModule, expect: Dict[str, Any]
+                  ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Prove ``donate_argnums`` buffers are actually aliased.
+
+    ``jax.jit(..., donate_argnums=...)`` is a *request*: if the aliasing
+    is refused (a dtype change, a copy forced by layout, a plain typo
+    dropping the argument) the program silently keeps BOTH buffers live
+    — for the serving engine's KV cache (``serve/engine.py``) that
+    doubles cache HBM and adds a full-tensor copy per decode step.  The
+    compiled module records granted donations in ``input_output_alias``;
+    this pass checks every contracted parameter number appears there,
+    and flags full-tensor ``copy`` instructions whose result shape
+    matches a contracted buffer (the symptom of a refused donation).
+    """
+    findings: List[Finding] = []
+    aliased = module.aliased_parameters()
+    expected = expect.get("donated_params") or ()
+    entry = module.entry_computation
+
+    param_shapes: Dict[int, str] = {}
+    if entry is not None:
+        for pn, ins in entry.params.items():
+            param_shapes[pn] = normalize_shape(ins.shape)
+
+    missing = [p for p in expected if p not in aliased]
+    for p in missing:
+        shp = param_shapes.get(p, "?")
+        findings.append(Finding(
+            "donation", "non-donated-buffer", "error",
+            f"{module.entry or '?'}/parameter {p}",
+            f"donated buffer (parameter {p}, {shp}) is NOT aliased into "
+            f"the output — the step keeps two live copies"))
+
+    # full-tensor copies of contracted buffer shapes: the copy a refused
+    # donation forces.  Flagged (warning) even when aliasing succeeded —
+    # a same-shaped copy next to an aliased cache is still a full
+    # read+write of cache HBM worth explaining.  Scalar / one-element
+    # shapes are excluded: every s32[] loop counter copy in the module
+    # would match the donated optimizer step scalar and drown the signal.
+    expected_shapes = set()
+    for p in expected:
+        shp = param_shapes.get(p)
+        if shp is not None and shape_info(shp)[1] > 1:
+            expected_shapes.add(shp)
+    full_copies = 0
+    for cname, ins in module.instructions():
+        if ins.op != "copy":
+            continue
+        if normalize_shape(ins.shape) in expected_shapes:
+            full_copies += 1
+            findings.append(Finding(
+                "donation", "full-tensor-copy", "warning",
+                f"{cname}/{ins.name}",
+                f"full-tensor copy of a donated buffer shape "
+                f"{normalize_shape(ins.shape)}"))
+
+    metrics = {"aliased_param_count": len(aliased),
+               "expected_donated": len(expected),
+               "missing_donations": len(missing),
+               "full_tensor_copies": full_copies}
+    return findings, metrics
+
+
+# ---------------------------------------------------------------------------
+# pass 4: dispatch counts
+# ---------------------------------------------------------------------------
+
+def dispatch_count_pass(module: HloModule, expect: Dict[str, Any]
+                        ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """GEMM dispatch sites and apply-time weight concats (subsumes the
+    legacy ``gemm_dispatches`` / ``weight_concat_count`` guards).
+
+    * a ``dot`` whose result's last dim equals ``gemm_out_cols`` is one
+      dispatch site of the audited GEMM; with packed QKV the decode
+      trace must contain exactly ONE (``expect_gemm_dispatches``);
+    * a ``concatenate`` producing a weight-shaped result — trailing dims
+      (d_model, n) — is the HLO signature of an apply-time wq/wk/wv
+      concat (a per-step weight-shard copy the packed parameter exists
+      to kill); ``expect_weight_concats`` is normally 0.
+
+    Counts are STATIC dispatch sites (a dot inside a scanned group body
+    appears once however many trips the loop runs) — the guard is about
+    program structure, not executed-FLOP accounting (``analyze_hlo``
+    does trip-scaled costs).
+    """
+    findings: List[Finding] = []
+    out_cols = expect.get("gemm_out_cols")
+    d_model = expect.get("d_model")
+
+    dot_total = 0
+    gemm_sites: List[str] = []
+    concat_sites: List[str] = []
+    for cname, ins in module.instructions():
+        if ins.op == "dot":
+            dot_total += 1
+            dims = ins.dims
+            if out_cols is not None and dims and dims[-1] == out_cols:
+                gemm_sites.append(f"{cname}/{ins.name}")
+        elif ins.op == "concatenate" and d_model is not None:
+            dims = ins.dims
+            if dims and len(dims) >= 2 and dims[-2] == d_model:
+                concat_sites.append(f"{cname}/{ins.name}")
+
+    want = expect.get("expect_gemm_dispatches")
+    if want is not None and len(gemm_sites) != want:
+        findings.append(Finding(
+            "dispatch-count", "gemm-dispatch-count", "error",
+            gemm_sites[0] if gemm_sites else module.entry or "?",
+            f"{len(gemm_sites)} GEMM dispatch sites at out_cols="
+            f"{out_cols}, contract requires {want} (packed-QKV single "
+            f"dispatch)"))
+    want_cc = expect.get("expect_weight_concats")
+    if want_cc is not None and len(concat_sites) != want_cc:
+        findings.append(Finding(
+            "dispatch-count", "weight-concat", "error",
+            concat_sites[0] if concat_sites else module.entry or "?",
+            f"{len(concat_sites)} apply-time weight-shaped concatenates "
+            f"at d_model={d_model}, contract requires {want_cc}"))
+
+    metrics: Dict[str, Any] = {"dot_count": dot_total,
+                               "weight_concat_count": len(concat_sites)}
+    if out_cols is not None:
+        metrics["gemm_dispatches"] = len(gemm_sites)
+    return findings, metrics
+
+
+PASSES = (collective_schedule_pass, dtype_flow_pass, donation_pass,
+          dispatch_count_pass)
+
+
+def run_passes(module: HloModule, expect: Dict[str, Any]
+               ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Run every pass; findings concatenated, metrics merged (disjoint
+    keyspaces by construction)."""
+    findings: List[Finding] = []
+    metrics: Dict[str, Any] = {}
+    for p in PASSES:
+        f, m = p(module, expect)
+        findings.extend(f)
+        metrics.update(m)
+    return findings, metrics

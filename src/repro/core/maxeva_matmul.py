@@ -144,6 +144,32 @@ def _z_groups(model: int, y: int) -> Optional[Sequence[Sequence[int]]]:
     return [[zz * y + yy for zz in range(z)] for yy in range(y)]
 
 
+def schedule_wire_ops(cfg: XYZConfig, model: int) -> Tuple[str, ...]:
+    """Collective HLO ops the XYZ plan prices for one forward GEMM — the
+    contract auditor's allowed set (``repro.analysis``): any OTHER
+    collective in the traced module is a barrier the overlap model never
+    accounted for.
+
+    Derived from the same branch structure as ``xyz_matmul``'s body:
+
+    * Y > 1 reductions: 'allreduce' -> all-reduce, 'reduce_scatter' ->
+      reduce-scatter, 'ring'/'bidir_ring' -> collective-permute hops;
+    * ksharded X with Z > 1: Y > 1 overlaps the gather as ppermute hops
+      (collective-permute), Y == 1 keeps the barrier all-gather ON
+      PURPOSE (no chunk GEMMs to hide it under — see the Y == 1 branch).
+    """
+    y, z = cfg.y, cfg.z(model)
+    ops = set()
+    if y > 1:
+        ops.add({"allreduce": "all-reduce",
+                 "reduce_scatter": "reduce-scatter",
+                 "ring": "collective-permute",
+                 "bidir_ring": "collective-permute"}[cfg.schedule])
+    if cfg.x_layout == "ksharded" and z > 1:
+        ops.add("collective-permute" if y > 1 else "all-gather")
+    return tuple(sorted(ops))
+
+
 def shard_weight_xyz(w: jnp.ndarray, model: int, y: int) -> jnp.ndarray:
     """Repack a [K, N] weight into xyz layout [model, K/Y, N/Z].
 

@@ -1,17 +1,28 @@
-"""Trip-count-aware HLO cost analysis.
+"""Historical HLO-guard API, now thin shims over ``repro.analysis``.
 
-XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+``weight_concat_count`` / ``gemm_dispatches`` / ``int8_bounce_count``
+were born as per-detector regex scans; PR 7 replaced the scanning with
+the typed parser + pass framework in ``src/repro/analysis/`` (one parse,
+def-use edges, hardened trip counts, donation metadata).  The functions
+keep their exact signatures and semantics — every existing guard call
+site (tests, benchmarks, the bench gate) works unchanged — and now share
+one code path with the contract auditor (``launch/audit.py``).
+
+``analyze_hlo`` remains the trip-count-aware cost analysis: XLA's
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
 scanned program (layers, flash chunks, loss chunks) under-reports FLOPs,
-bytes, and collective traffic by the trip counts.  This analyzer walks the
-optimized HLO text, builds a per-computation symbol table, extracts loop
-trip counts from the loop-condition comparison constant, and aggregates
+bytes, and collective traffic by the trip counts.  It aggregates
 
     flops       — dot ops: 2 * prod(result dims) * prod(contracting dims)
-    hbm bytes   — per instruction: result + operand bytes (post-fusion this
-                  matches XLA's own traffic model)
-    wire bytes  — per collective, ring-factor adjusted by replica-group size
+    hbm bytes   — per instruction: result + operand bytes (post-fusion
+                  this matches XLA's own traffic model)
+    wire bytes  — per collective, ring-factor adjusted by replica-group
+                  size
 
-recursively: cost(comp) = local + sum over calls of trips * cost(callee).
+recursively: cost(comp) = local + sum over calls of trips * cost(callee),
+with trip counts from the hardened ``condition_trip_count`` (multi-digit,
+scientific-notation, and tuple-shaped condition constants all parse; the
+old parser silently returned 1 for anything but ``s32[] constant(N)``).
 
 Validated against unrolled-vs-scanned equivalence in tests.
 """
@@ -19,28 +30,19 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
-_DTYPE_BYTES = {
-    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
-    "f32": 4, "s32": 4, "u32": 4,
-    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
-    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
-    "s8": 1, "u8": 1, "pred": 1,
-}
-
-_SHAPE_RE = re.compile(r"^(\w+)\[([\d,]*)\]")
-_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->.*\{\s*$")
-_INSTR = re.compile(
-    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+?)\s+"
-    r"([\w\-]+)\((.*)$")
-_OPERAND = re.compile(r"%([\w.\-]+)")
-_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
-_COND = re.compile(r"condition=%?([\w.\-]+)")
-_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
-_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
-_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
-_CONSTANT = re.compile(r"constant\((\d+)\)")
+from repro.analysis.hlo_graph import (
+    HloModule,
+    condition_trip_count,
+    parse_hlo,
+    shape_dims,
+    shape_info,
+)
+from repro.analysis.passes import (
+    _taint_dequants,
+    dispatch_count_pass,
+)
 
 _SKIP_BYTES_OPS = {
     "parameter", "tuple", "get-tuple-element", "bitcast", "constant",
@@ -59,105 +61,14 @@ _FUSABLE_OPS = {
 _COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute", "ragged-all-to-all"}
 
+# the cost model follows ONE callee per call site — the fusion/call/loop
+# body — never the while condition (it carries no modeled cost)
+_COST_CALLEE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
-def _shape_info(s: str) -> Tuple[float, int]:
-    """(total bytes, element count) for a shape or tuple-of-shapes string."""
-    total_b = 0.0
-    total_n = 0
-    for dt, dims in re.findall(r"(\w+?)\[([\d,]*)\]", s):
-        if dt not in _DTYPE_BYTES:
-            continue
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total_b += n * _DTYPE_BYTES[dt]
-        total_n += n
-    return total_b, total_n
-
-
-@dataclasses.dataclass
-class Instr:
-    name: str
-    shape: str
-    op: str
-    rest: str
-    operands: List[str]
-
-
-@dataclasses.dataclass
-class CompCost:
-    flops: float = 0.0
-    bytes: float = 0.0        # all instruction result+operand bytes
-    bytes_fused: float = 0.0  # excluding ops a TPU compiler would fuse
-    wire: Dict[str, float] = dataclasses.field(default_factory=dict)
-
-
-def _parse_computations(text: str) -> Dict[str, List[Instr]]:
-    comps: Dict[str, List[Instr]] = {}
-    entry: Optional[str] = None
-    cur: Optional[str] = None
-    for line in text.splitlines():
-        if cur is None:
-            m = _COMP_HDR.match(line.strip()) if "{" in line else None
-            if m and ("->" in line):
-                cur = m.group(1)
-                comps[cur] = []
-                if line.strip().startswith("ENTRY"):
-                    entry = cur
-            continue
-        if line.strip() == "}":
-            cur = None
-            continue
-        m = _INSTR.match(line)
-        if m:
-            name, shape, op, rest = m.groups()
-            # operands: %refs inside the first parenthesis group
-            depth, i, args = 1, 0, rest
-            for i, ch in enumerate(rest):
-                if ch == "(":
-                    depth += 1
-                elif ch == ")":
-                    depth -= 1
-                    if depth == 0:
-                        args = rest[:i]
-                        break
-            operands = _OPERAND.findall(args)
-            comps[cur].append(Instr(name, shape, op, rest, operands))
-    if entry is not None and entry != "__entry__":
-        comps["__entry__"] = comps[entry]
-    return comps
-
-
-def _trip_count(cond_instrs: List[Instr]) -> int:
-    """Scan/fori loops compare the induction var against the trip-count
-    constant; the comparison may be hidden inside a wrapped computation, so
-    take the max s32 scalar constant of the condition region (other
-    condition constants are 0/1 steps)."""
-    best = 1
-    for ins in cond_instrs:
-        if ins.op == "constant" and ins.shape.replace("%", "").startswith(
-                "s32[]"):
-            m = re.match(r"(\d+)\)", ins.rest)
-            if m:
-                best = max(best, int(m.group(1)))
-    return best
-
-
-def _result_dims(shape: str) -> Optional[List[int]]:
-    m = _SHAPE_RE.match(shape)
-    if not m:
-        return None
-    return [int(x) for x in m.group(2).split(",")] if m.group(2) else []
-
-
-def _iter_instrs(text: str):
-    comps = _parse_computations(text)
-    for cname, instrs in comps.items():
-        if cname == "__entry__":  # alias of the entry computation
-            continue
-        for ins in instrs:
-            yield ins
+_RECURSIVE_OPS = ("while", "fusion", "call", "conditional", "reduce",
+                  "map", "sort", "scatter", "reduce-window",
+                  "select-and-scatter", "custom-call", "async-start")
 
 
 def weight_concat_count(text: str, d_model: int) -> int:
@@ -165,37 +76,19 @@ def weight_concat_count(text: str, d_model: int) -> int:
     result — trailing dims (d_model, n) — anywhere in the module.  This is
     the HLO signature of an apply-time wq/wk/wv concat: the packed-QKV
     path must report ZERO (the packed parameter is GEMM'd as stored, no
-    per-step weight-shard copy)."""
-    count = 0
-    for ins in _iter_instrs(text):
-        if ins.op != "concatenate":
-            continue
-        dims = _result_dims(ins.shape)
-        if dims and len(dims) >= 2 and dims[-2] == d_model:
-            count += 1
-    return count
+    per-step weight-shard copy).  Shim over the dispatch-count pass."""
+    _, metrics = dispatch_count_pass(parse_hlo(text), {"d_model": d_model})
+    return metrics["weight_concat_count"]
 
 
 def gemm_dispatches(text: str, out_cols: int) -> int:
     """Count ``dot`` instructions whose result's last dim is ``out_cols``.
     With packed QKV, ``gemm_dispatches(hlo, q_dim + 2*kv_dim)`` == number
-    of attention applies traced (one QKV GEMM dispatch each)."""
-    count = 0
-    for ins in _iter_instrs(text):
-        if ins.op != "dot":
-            continue
-        dims = _result_dims(ins.shape)
-        if dims and dims[-1] == out_cols:
-            count += 1
-    return count
-
-
-def _dtype_of(shape: str) -> str:
-    m = _SHAPE_RE.match(shape.replace("%", ""))
-    return m.group(1) if m else ""
-
-
-_FLOAT_DTYPES = {"f16", "bf16", "f32", "f64"}
+    of attention applies traced (one QKV GEMM dispatch each).  Shim over
+    the dispatch-count pass."""
+    _, metrics = dispatch_count_pass(parse_hlo(text),
+                                     {"gemm_out_cols": out_cols})
+    return metrics["gemm_dispatches"]
 
 
 def int8_bounce_count(text: str) -> int:
@@ -212,81 +105,25 @@ def int8_bounce_count(text: str) -> int:
     integer convert, not counted) and re-applies scales on the int32
     accumulator AFTER the dot, so a traced int8 decode must report ZERO.
 
-    Taint propagation is conservative across called computations (any
-    tainted operand taints every parameter of the callee; a callee with
-    any tainted instruction taints the call-site result), which can only
-    over-count — safe for a zero-bounce gate.
+    Shim over the dtype-flow taint pass: the same conservative
+    cross-computation fixpoint (any tainted operand taints every callee
+    parameter; a dirty callee taints the call-site result), which can
+    only over-count — safe for a zero-bounce gate.
     """
-    comps = _parse_computations(text)
-    table: Dict[str, Dict[str, str]] = {
-        c: {i.name: i.shape for i in instrs} for c, instrs in comps.items()
-    }
-    real = [c for c in comps if c != "__entry__"]
-    tainted: Dict[str, set] = {c: set() for c in comps}
-    comp_dirty: Dict[str, bool] = {c: False for c in comps}
+    return len(_taint_dequants(parse_hlo(text)))
 
-    # parameter index -> instruction name, per computation
-    params_of: Dict[str, Dict[int, str]] = {}
-    for c in real:
-        d: Dict[int, str] = {}
-        for ins in comps[c]:
-            if ins.op == "parameter":
-                m = re.match(r"(\d+)\)", ins.rest)
-                if m:
-                    d[int(m.group(1))] = ins.name
-        params_of[c] = d
 
-    bounces = set()
-    changed = True
-    while changed:
-        changed = False
-        for c in real:
-            for ins in comps[c]:
-                if ins.name in tainted[c]:
-                    hit = True
-                else:
-                    hit = False
-                    # seed: dequantization of an int8 tensor
-                    if (ins.op == "convert"
-                            and _dtype_of(ins.shape) in _FLOAT_DTYPES):
-                        opshape = table[c].get(
-                            ins.operands[0]) if ins.operands else None
-                        if opshape is not None and _dtype_of(opshape) == "s8":
-                            hit = True
-                    # propagate: any tainted operand taints the result
-                    if not hit and any(o in tainted[c]
-                                       for o in ins.operands):
-                        hit = True
-                    # a callee holding tainted values taints the call site
-                    sub = _CALLS.search(ins.rest)
-                    if not hit and sub and comp_dirty.get(sub.group(1)):
-                        hit = True
-                    if hit:
-                        tainted[c].add(ins.name)
-                        comp_dirty[c] = True
-                        changed = True
-                # cross-computation: tainted operands taint callee params
-                sub = _CALLS.search(ins.rest)
-                if sub and sub.group(1) in params_of and any(
-                        o in tainted[c] for o in ins.operands):
-                    callee = sub.group(1)
-                    for pname in params_of[callee].values():
-                        if pname not in tainted[callee]:
-                            tainted[callee].add(pname)
-                            comp_dirty[callee] = True
-                            changed = True
-                if ins.op == "dot" and any(o in tainted[c]
-                                           for o in ins.operands):
-                    bounces.add((c, ins.name))
-    return len(bounces)
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0        # all instruction result+operand bytes
+    bytes_fused: float = 0.0  # excluding ops a TPU compiler would fuse
+    wire: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 def analyze_hlo(text: str) -> Dict[str, float]:
-    comps = _parse_computations(text)
-    table: Dict[str, Dict[str, str]] = {
-        c: {i.name: i.shape for i in instrs} for c, instrs in comps.items()
-    }
-
+    module: HloModule = parse_hlo(text)
+    comps = module.computations
     memo: Dict[str, CompCost] = {}
 
     def cost_of(cname: str, stack=()) -> CompCost:
@@ -294,44 +131,36 @@ def analyze_hlo(text: str) -> Dict[str, float]:
             return memo[cname]
         if cname in stack or cname not in comps:
             return CompCost()
+        comp = comps[cname]
         total = CompCost()
-        for ins in comps[cname]:
-            shp_b, shp_n = _shape_info(ins.shape)
+        for ins in comp.instructions:
+            shp_b, shp_n = shape_info(ins.shape)
             # -- bytes ---------------------------------------------------------
             if ins.op not in _SKIP_BYTES_OPS and ins.op != "while":
                 b = shp_b
                 for o in ins.operands:
-                    os = table[cname].get(o)
+                    os = comp.shape_of(o)
                     if os is not None:
-                        b += _shape_info(os)[0]
+                        b += shape_info(os)[0]
                 total.bytes += b
                 if ins.op not in _FUSABLE_OPS:
                     total.bytes_fused += b
             # -- flops ----------------------------------------------------------
             if ins.op == "dot":
-                cd = _CONTRACT.search(ins.rest)
+                cd = _CONTRACT.search(ins.attrs_str)
                 k = 1
                 if cd and ins.operands:
-                    lhs = table[cname].get(ins.operands[0], "")
-                    m2 = _SHAPE_RE.match(lhs)
-                    if m2 and m2.group(2):
-                        dims = [int(d) for d in m2.group(2).split(",")]
+                    lhs_dims = shape_dims(comp.shape_of(ins.operands[0])
+                                          or "")
+                    if lhs_dims:
                         for di in (cd.group(1).split(",")
                                    if cd.group(1) else []):
-                            k *= dims[int(di)]
+                            k *= lhs_dims[int(di)]
                 total.flops += 2.0 * shp_n * k
             # -- collectives -----------------------------------------------------
             base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
             if base in _COLLECTIVES and not ins.op.endswith("-done"):
-                g = 1
-                m2 = _GROUPS_IOTA.search(ins.rest)
-                if m2:
-                    g = int(m2.group(2))
-                else:
-                    m3 = _GROUPS_LIST.search(ins.rest)
-                    if m3:
-                        g = max(1, len([t for t in m3.group(1).split(",")
-                                        if t.strip()]))
+                g = ins.replica_group_size
                 if base == "all-reduce":
                     w = 2.0 * (g - 1) / g * shp_b
                 elif base == "all-gather":
@@ -344,16 +173,13 @@ def analyze_hlo(text: str) -> Dict[str, float]:
                     w = shp_b
                 total.wire[base] = total.wire.get(base, 0.0) + w
             # -- nested computations ----------------------------------------------
-            sub = _CALLS.search(ins.rest)
-            if sub and ins.op in ("while", "fusion", "call", "conditional",
-                                  "reduce", "map", "sort", "scatter",
-                                  "reduce-window", "select-and-scatter",
-                                  "custom-call", "async-start"):
+            sub = _COST_CALLEE.search(ins.attrs_str)
+            if sub and ins.op in _RECURSIVE_OPS:
                 trips = 1
                 if ins.op == "while":
-                    cm = _COND.search(ins.rest)
-                    if cm and cm.group(1) in comps:
-                        trips = _trip_count(comps[cm.group(1)])
+                    cond = ins.condition
+                    if cond in comps:
+                        trips = condition_trip_count(comps[cond])
                 sc = cost_of(sub.group(1), stack + (cname,))
                 total.flops += trips * sc.flops
                 # fusion/reduce internals live in registers; their HBM
@@ -369,7 +195,7 @@ def analyze_hlo(text: str) -> Dict[str, float]:
 
     # Count only from the entry; nested computations are reached via calls,
     # which avoids double counting.
-    entry = cost_of("__entry__")
+    entry = cost_of(module.entry or "")
     out = {"flops": entry.flops, "bytes": entry.bytes,
            "bytes_fused": entry.bytes_fused}
     for k, v in entry.wire.items():

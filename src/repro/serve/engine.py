@@ -50,6 +50,15 @@ from repro.robust.guards import (
 _ON_NONFINITE = ("quarantine", "raise", "off")
 
 
+def _decode_jit(model: Model):
+    """The production decode-step program: KV cache donated (argnums 1).
+
+    Single construction site, used by both ``ServeEngine.__init__`` and
+    the contract auditor (``ServeEngine.decode_step_lowered``) — the
+    served program and the audited program cannot drift apart."""
+    return jax.jit(model.decode_step, donate_argnums=(1,))
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_new_tokens: int = 32
@@ -152,12 +161,37 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, b, ml: model.prefill(p, b, max_len=ml),
             static_argnums=(2,))
-        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._decode = _decode_jit(model)
         # fp32 fallback decode: non-donating (it reads the cache the int8
         # step subsequently consumes) and traced on the fp param tree
         self._decode_fp = (jax.jit(model.decode_step)
                            if self._fp_params is not None else None)
         self._pick_guarded = jax.jit(self._pick_and_probe)
+
+    @classmethod
+    def decode_step_lowered(cls, model: Model, scfg: ServeConfig,
+                            batch: int, prompt_len: int):
+        """Lower the engine's decode step ABSTRACTLY (no real weights)
+        for the HLO contract auditor.
+
+        Returns ``(lowered, donated_param_numbers)``: the same jit the
+        engine serves (``_decode_jit`` — KV cache donated), lowered on
+        ShapeDtypeStructs, plus the flat parameter numbers of the donated
+        cache leaves (params flatten first, then cache — the numbers the
+        compiled module's ``input_output_alias`` must cover for the
+        donation to have actually been granted)."""
+        aparams = model.abstract_params()
+        if scfg.int8:
+            aparams = jax.eval_shape(model.quantize_params_for_serving,
+                                     aparams)
+        max_len = prompt_len + scfg.max_new_tokens
+        acache = model.abstract_cache(batch, max_len)
+        tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = _decode_jit(model).lower(aparams, acache, tok, pos)
+        n_p = len(jax.tree_util.tree_leaves(aparams))
+        n_c = len(jax.tree_util.tree_leaves(acache))
+        return lowered, tuple(range(n_p, n_p + n_c))
 
     @classmethod
     def from_checkpoint(cls, model: Model, ckpt_dir: str,

@@ -1,0 +1,444 @@
+"""Unit tests for the HLO contract auditor (``src/repro/analysis/``).
+
+Four layers:
+
+  * parser: typed graph construction, donation metadata, and the
+    HARDENED trip-count extraction (multi-digit / scientific-notation /
+    tuple-shaped condition constants — the old ``_trip_count`` silently
+    returned 1 on all of these, captured here as HLO snippets);
+  * passes: permutation validity, inverse rotations, barrier
+    collectives, dtype taint, f64 leaks, donation/aliasing;
+  * shims: ``launch/hlo_analysis`` reproduces the legacy fixpoint
+    behavior on the deliberate-bounce fixture and on real traces;
+  * baseline diff: the pure contract-vs-``HLO_CONTRACTS.json`` compare
+    (violations, drift, coverage regressions).
+
+The traced-from-jax cases stay on the default single CPU device; the
+full multidev contract registry runs under ``scripts/ci.sh analyze``.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import parse_hlo, run_passes
+from repro.analysis.contract import TraceReport, diff_baseline
+from repro.analysis.hlo_graph import condition_trip_count
+from repro.analysis.passes import (
+    Finding,
+    collective_schedule_pass,
+    donation_pass,
+    dtype_flow_pass,
+)
+from repro.launch.hlo_analysis import analyze_hlo, int8_bounce_count
+
+
+def _hlo(body: str) -> str:
+    return textwrap.dedent(body)
+
+
+# ---------------------------------------------------------------------------
+# parser: typed graph + donation metadata
+# ---------------------------------------------------------------------------
+
+HLO_ALIASED = _hlo("""
+    HloModule decode, input_output_alias={ {1}: (1, {}, may-alias), {2}: (2, {}, may-alias) }, entry_computation_layout={()->()}
+
+    ENTRY %main (p0: f32[4,8], p1: bf16[2,24], p2: bf16[2,24]) -> (f32[4,8], bf16[2,24], bf16[2,24]) {
+      %p0 = f32[4,8] parameter(0)
+      %p1 = bf16[2,24] parameter(1)
+      %p2 = bf16[2,24] parameter(2)
+      ROOT %t = (f32[4,8], bf16[2,24], bf16[2,24]) tuple(%p0, %p1, %p2)
+    }
+""")
+
+
+def test_parser_module_alias_and_entry():
+    m = parse_hlo(HLO_ALIASED)
+    assert m.name == "decode"
+    assert m.entry == "main"
+    assert m.aliased_parameters() == {1: (1,), 2: (2,)}
+    entry = m.entry_computation
+    assert sorted(entry.params) == [0, 1, 2]
+    assert entry.root.op == "tuple"
+    assert entry.root.operands == ("p0", "p1", "p2")
+
+
+def test_parser_def_use_edges():
+    m = parse_hlo(HLO_ALIASED)
+    users = m.entry_computation.users
+    assert [u.name for u in users["p0"]] == ["t"]
+
+
+# ---------------------------------------------------------------------------
+# parser: hardened trip counts (PR 7 satellite)
+# ---------------------------------------------------------------------------
+
+def _cond(hlo: str):
+    m = parse_hlo(hlo)
+    return m.computations["cond"]
+
+
+def test_trip_count_multi_digit():
+    """Multi-digit bounds parse in full (a naive first-digit grab reads
+    128 as 1)."""
+    c = _cond(_hlo("""
+        HloModule m
+        %cond (p: (s32[], f32[4])) -> pred[] {
+          %p = (s32[], f32[4]) parameter(0)
+          %iv = s32[] get-tuple-element(%p), index=0
+          %lim = s32[] constant(128)
+          ROOT %lt = pred[] compare(%iv, %lim), direction=LT
+        }
+    """))
+    assert condition_trip_count(c) == 128
+
+
+def test_trip_count_scientific_notation():
+    """fori over a float carry prints the bound as f32[] constant(1e+06)
+    — the legacy parser only accepted s32 digits and fell back to 1,
+    under-counting a million-step loop's FLOPs by 6 orders."""
+    c = _cond(_hlo("""
+        HloModule m
+        %cond (p: (f32[], f32[4])) -> pred[] {
+          %p = (f32[], f32[4]) parameter(0)
+          %iv = f32[] get-tuple-element(%p), index=0
+          %lim = f32[] constant(1e+06)
+          ROOT %lt = pred[] compare(%iv, %lim), direction=LT
+        }
+    """))
+    assert condition_trip_count(c) == 1_000_000
+
+
+def test_trip_count_tuple_shaped_constant():
+    """A tuple-shaped condition constant (bound folded together with a
+    step) must surface the integral bound, not silently parse as 1."""
+    c = _cond(_hlo("""
+        HloModule m
+        %cond (p: (s32[], f32[4])) -> pred[] {
+          %p = (s32[], f32[4]) parameter(0)
+          %iv = s32[] get-tuple-element(%p), index=0
+          %k = (s32[], s32[]) constant((40, 1))
+          %lim = s32[] get-tuple-element(%k), index=0
+          ROOT %lt = pred[] compare(%iv, %lim), direction=LT
+        }
+    """))
+    assert condition_trip_count(c) == 40
+
+
+def test_trip_count_ignores_non_integral_floats():
+    """Tolerances (1e-6) and fractional constants never become trip
+    counts; the floor stays 1."""
+    c = _cond(_hlo("""
+        HloModule m
+        %cond (p: (f32[], f32[4])) -> pred[] {
+          %p = (f32[], f32[4]) parameter(0)
+          %iv = f32[] get-tuple-element(%p), index=0
+          %eps = f32[] constant(1e-06)
+          %half = f32[] constant(2.5)
+          ROOT %lt = pred[] compare(%iv, %eps), direction=LT
+        }
+    """))
+    assert condition_trip_count(c) == 1
+
+
+def test_analyze_hlo_scales_by_hardened_trip_count():
+    """End to end through the shim: a 3-digit bound scales FLOPs (the
+    legacy parser handled this; the hardened one must not regress it)."""
+    hlo = _hlo("""
+        HloModule m
+
+        %cond (p: (s32[], f32[4,16])) -> pred[] {
+          %p = (s32[], f32[4,16]) parameter(0)
+          %iv = s32[] get-tuple-element(%p), index=0
+          %lim = s32[] constant(250)
+          ROOT %lt = pred[] compare(%iv, %lim), direction=LT
+        }
+
+        %body (bp: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+          %bp = (s32[], f32[4,16]) parameter(0)
+          %a = f32[4,16] get-tuple-element(%bp), index=1
+          %w = f32[16,16] constant({...})
+          %d = f32[4,16] dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+          %i = s32[] get-tuple-element(%bp), index=0
+          %one = s32[] constant(1)
+          %n = s32[] add(%i, %one)
+          ROOT %t = (s32[], f32[4,16]) tuple(%n, %d)
+        }
+
+        ENTRY %main (p0: (s32[], f32[4,16])) -> (s32[], f32[4,16]) {
+          %p0 = (s32[], f32[4,16]) parameter(0)
+          ROOT %w2 = (s32[], f32[4,16]) while(%p0), condition=%cond, body=%body
+        }
+    """)
+    assert analyze_hlo(hlo)["flops"] == 250 * 2.0 * 4 * 16 * 16
+
+
+# ---------------------------------------------------------------------------
+# collective-schedule pass
+# ---------------------------------------------------------------------------
+
+def _permute_hlo(pairs: str, extra: str = "") -> str:
+    return _hlo(f"""
+        HloModule m
+        ENTRY %main (p0: f32[8,8]) -> f32[8,8] {{
+          %p0 = f32[8,8] parameter(0)
+          %hop = f32[8,8] collective-permute(%p0), source_target_pairs={pairs}
+          {extra}
+          ROOT %out = f32[8,8] add(%p0, %hop)
+        }}
+    """)
+
+
+def test_invalid_permutation_duplicate_target():
+    m = parse_hlo(_permute_hlo("{{0,1},{2,1}}"))
+    findings, _ = collective_schedule_pass(m, {})
+    assert any(f.code == "invalid-permutation" and f.severity == "error"
+               for f in findings)
+
+
+def test_valid_rotation_no_finding():
+    m = parse_hlo(_permute_hlo("{{0,1},{1,2},{2,3},{3,0}}"))
+    findings, metrics = collective_schedule_pass(m, {})
+    assert findings == []
+    assert metrics["n_permutes"] == 1
+    # a lone +1 rotation has no inverse partner in the module
+    assert metrics["inverse_paired_permutes"] == 0
+
+
+def test_missing_inverse_rotation_flagged_under_bidir_contract():
+    m = parse_hlo(_permute_hlo("{{0,1},{1,2},{2,3},{3,0}}"))
+    findings, _ = collective_schedule_pass(
+        m, {"require_inverse_permutes": True})
+    assert any(f.code == "missing-inverse-rotation" for f in findings)
+
+
+def test_inverse_rotations_pair_up():
+    fwd = "{{0,1},{1,2},{2,3},{3,0}}"
+    bwd = ("%hop2 = f32[8,8] collective-permute(%p0), "
+           "source_target_pairs={{1,0},{2,1},{3,2},{0,3}}")
+    m = parse_hlo(_permute_hlo(fwd, extra=bwd))
+    findings, metrics = collective_schedule_pass(
+        m, {"require_inverse_permutes": True})
+    assert findings == []
+    assert metrics["inverse_paired_permutes"] == 2
+
+
+def test_barrier_all_gather_on_overlapped_path_is_error():
+    hlo = _hlo("""
+        HloModule m
+        ENTRY %main (p0: f32[8,8]) -> f32[8,16] {
+          %p0 = f32[8,8] parameter(0)
+          ROOT %ag = f32[8,16] all-gather(%p0), replica_groups={{0,1},{2,3}}, dimensions={1}
+        }
+    """)
+    findings, _ = collective_schedule_pass(
+        parse_hlo(hlo),
+        {"allowed_collectives": ("collective-permute", "reduce-scatter")})
+    hits = [f for f in findings if f.code == "barrier-all-gather"]
+    assert hits and hits[0].severity == "error"
+    # without a declared schedule the same module is clean
+    clean, _ = collective_schedule_pass(parse_hlo(hlo), {})
+    assert clean == []
+
+
+# ---------------------------------------------------------------------------
+# dtype-flow pass
+# ---------------------------------------------------------------------------
+
+def test_f64_leak_flagged_only_under_contract():
+    hlo = _hlo("""
+        HloModule m
+        ENTRY %main (p0: f32[4]) -> f64[4] {
+          %p0 = f32[4] parameter(0)
+          ROOT %up = f64[4] convert(%p0)
+        }
+    """)
+    m = parse_hlo(hlo)
+    findings, metrics = dtype_flow_pass(m, {"forbid_f64": True})
+    codes = {f.code for f in findings if f.severity == "error"}
+    assert "f64-leak" in codes and "silent-upcast" in codes
+    assert metrics["f64_instruction_count"] == 1
+    relaxed, _ = dtype_flow_pass(m, {})
+    assert all(f.severity != "error" for f in relaxed)
+
+
+def test_int8_clean_promotes_bounce_to_error():
+    hlo = _hlo("""
+        HloModule m
+        ENTRY %main (q: s8[4,8], w: f32[8,8]) -> f32[4,8] {
+          %q = s8[4,8] parameter(0)
+          %w = f32[8,8] parameter(1)
+          %deq = f32[4,8] convert(%q)
+          ROOT %d = f32[4,8] dot(%deq, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+        }
+    """)
+    m = parse_hlo(hlo)
+    strict, _ = dtype_flow_pass(m, {"int8_clean": True})
+    assert any(f.code == "int8-bounce" and f.severity == "error"
+               for f in strict)
+    lax_, metrics = dtype_flow_pass(m, {})
+    assert all(f.severity != "error" for f in lax_)
+    assert metrics["int8_bounce_count"] == 1
+
+
+# ---------------------------------------------------------------------------
+# donation pass (satellite: non-donated decode trips, production doesn't)
+# ---------------------------------------------------------------------------
+
+def _smoke_model():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.launch.mesh import make_mesh
+    from repro.models.lm import Model
+    cfg = dataclasses.replace(get_config("internlm2-1.8b", smoke=True),
+                              d_ff=96)
+    return Model(cfg, make_mesh(1, 1))
+
+
+def _decode_args(model, b=2, s=16, max_len=24):
+    aparams = model.abstract_params()
+    acache = model.abstract_cache(b, max_len)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    n_p = len(jax.tree_util.tree_leaves(aparams))
+    n_c = len(jax.tree_util.tree_leaves(acache))
+    return (aparams, acache, tok, pos), tuple(range(n_p, n_p + n_c))
+
+
+def test_non_donated_decode_trips_auditor():
+    """A decode step jitted WITHOUT donate_argnums keeps two live copies
+    of the KV cache — the donation pass must report every cache leaf."""
+    model = _smoke_model()
+    args, donated = _decode_args(model)
+    hlo = jax.jit(model.decode_step).lower(*args).compile().as_text()
+    findings, metrics = donation_pass(parse_hlo(hlo),
+                                      {"donated_params": donated})
+    errs = [f for f in findings if f.code == "non-donated-buffer"]
+    assert len(errs) == len(donated)
+    assert metrics["missing_donations"] == len(donated)
+
+
+def test_production_donated_decode_is_clean():
+    """The engine's production jit (donate_argnums=(1,), built through
+    ``ServeEngine.decode_step_lowered``) aliases every cache leaf."""
+    from repro.serve.engine import ServeConfig, ServeEngine
+    model = _smoke_model()
+    lowered, donated = ServeEngine.decode_step_lowered(
+        model, ServeConfig(max_new_tokens=8), batch=2, prompt_len=16)
+    m = parse_hlo(lowered.compile().as_text())
+    findings, metrics = donation_pass(m, {"donated_params": donated})
+    assert metrics["missing_donations"] == 0
+    assert not [f for f in findings if f.severity == "error"]
+    assert set(donated) <= set(m.aliased_parameters())
+
+
+# ---------------------------------------------------------------------------
+# shims: legacy fixpoint behavior preserved (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_shim_reproduces_fixpoint_on_deliberate_bounce():
+    """The deliberate-bounce fixture from tests/test_int8_serving.py:
+    dequantize -> float GEMM -> requantize.  The shim (now the taint
+    pass) must agree with the legacy fixpoint: at least one bounce on
+    the naive pipeline, zero on the clean one, and the count equals the
+    dtype-flow pass metric (one shared code path)."""
+    def bounced(qx, sx, w):
+        x = qx.astype(jnp.float32) * sx   # s8 -> f32 dequant
+        y = x @ w                         # fp32 GEMM consumes it
+        s = jnp.max(jnp.abs(y), axis=-1, keepdims=True) / 127.0
+        return jnp.clip(jnp.round(y / s), -127, 127).astype(jnp.int8), s
+
+    qx = jax.ShapeDtypeStruct((4, 64), jnp.int8)
+    sx = jax.ShapeDtypeStruct((4, 1), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    hlo = jax.jit(bounced).lower(qx, sx, w).compile().as_text()
+    n = int8_bounce_count(hlo)
+    assert n >= 1
+    _, metrics = dtype_flow_pass(parse_hlo(hlo), {})
+    assert metrics["int8_bounce_count"] == n
+
+    def clean(qx, sx, w):
+        return qx.astype(jnp.int32) @ w.astype(jnp.int32)
+
+    hlo2 = jax.jit(clean).lower(qx, sx, w).compile().as_text()
+    assert int8_bounce_count(hlo2) == 0
+
+
+# ---------------------------------------------------------------------------
+# baseline diff (pure function)
+# ---------------------------------------------------------------------------
+
+def _report(name, metrics=None, findings=(), skipped=""):
+    return TraceReport(name, list(findings), dict(metrics or {}),
+                       skipped=skipped)
+
+
+def _err(code="non-donated-buffer"):
+    return Finding("donation", code, "error", "main/p", "boom")
+
+
+def _warn(code="full-tensor-copy"):
+    return Finding("donation", code, "warning", "main/c", "copy")
+
+
+def test_diff_matching_baseline_passes():
+    r = _report("decode", {"dot_count": 8}, [_warn()])
+    base = {"contracts": {"decode": {
+        "metrics": {"dot_count": 8},
+        "findings": {"warning:donation/full-tensor-copy": 1}}}}
+    failures, _ = diff_baseline([r], base)
+    assert failures == []
+
+
+def test_diff_error_finding_always_fails():
+    r = _report("decode", {"dot_count": 8}, [_err()])
+    base = {"contracts": {"decode": {
+        "metrics": {"dot_count": 8},
+        "findings": {"error:donation/non-donated-buffer": 1}}}}
+    failures, _ = diff_baseline([r], base)
+    assert any("VIOLATION" in f for f in failures)
+
+
+def test_diff_metric_drift_fails_with_update_hint():
+    r = _report("decode", {"dot_count": 9}, [])
+    base = {"contracts": {"decode": {"metrics": {"dot_count": 8},
+                                     "findings": {}}}}
+    failures, _ = diff_baseline([r], base)
+    assert any("DRIFT" in f and "--update-baseline" in f
+               for f in failures)
+
+
+def test_diff_warning_count_drift_fails():
+    r = _report("decode", {"dot_count": 8}, [_warn(), _warn()])
+    base = {"contracts": {"decode": {
+        "metrics": {"dot_count": 8},
+        "findings": {"warning:donation/full-tensor-copy": 1}}}}
+    failures, _ = diff_baseline([r], base)
+    assert any("DRIFT" in f for f in failures)
+
+
+def test_diff_new_and_missing_contracts_fail():
+    r = _report("fresh", {"dot_count": 1})
+    base = {"contracts": {"gone": {"metrics": {}, "findings": {}}}}
+    failures, _ = diff_baseline([r], base)
+    assert any("NEW contract fresh" in f for f in failures)
+    assert any("MISSING contract gone" in f for f in failures)
+
+
+def test_diff_device_skip_policy():
+    r = _report("xyz", skipped="needs 8 devices, have 1")
+    base = {"contracts": {"xyz": {"metrics": {}, "findings": {}}}}
+    strict, _ = diff_baseline([r], base)
+    assert any("SKIPPED" in f for f in strict)
+    relaxed, lines = diff_baseline([r], base, allow_device_skips=True)
+    assert relaxed == []
+    assert any(line.startswith("skip xyz") for line in lines)
+
+
+def test_diff_no_baseline_still_fails_on_violation():
+    ok = _report("decode", {"dot_count": 8})
+    bad = _report("decode2", {"dot_count": 8}, [_err()])
+    failures, _ = diff_baseline([ok, bad], None)
+    assert len(failures) == 1 and "VIOLATION" in failures[0]
