@@ -54,7 +54,8 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     sys.path.insert(0, _ROOT)
     from benchmarks import (fused_epilogue, int8_decode,
-                            serve_guard_overhead, tpu_matmul)
+                            serve_guard_overhead, serve_throughput,
+                            tpu_matmul)
 
     rows: List[Tuple[str, float, str]] = []
     # one pass of the interleaved fused-vs-unfused sweep (the gate's own
@@ -72,6 +73,11 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
     # <2% health-guard overhead per decode step (timing, WARN — same
     # noise policy as fused_le_unfused)
     rows += serve_guard_overhead.rows()
+    # serve_throughput drives one mixed workload through the continuous-
+    # batching scheduler and the fixed-batch loop; sched_beats_fixed is
+    # timing-derived (WARN here, hard fail in the standalone entry point
+    # — same noise policy as fused_le_unfused)
+    rows += serve_throughput.rows()
 
     out: Dict[str, float] = {}
     violations: List[str] = []
@@ -97,6 +103,12 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
             # health guards must never alter the traced decode step
             violations.append(f"{name}: guards changed the decode-step "
                               f"HLO ({derived})")
+        if "sched_beats_fixed=False" in derived:
+            # timing-derived (same policy as fused_le_unfused): the
+            # standalone serve_throughput entry point fails hard on this,
+            # the gate's single pass only warns
+            print(f"bench_gate: WARN {name} scheduler measured slower "
+                  f"than the fixed loop this pass ({derived})")
         if "guard_overhead_lt_2pct=False" in derived:
             # timing-derived (same policy as fused_le_unfused): the
             # standalone benchmark entry point fails hard on this, the

@@ -8,6 +8,7 @@
 #   scripts/ci.sh multidev    # fake-8-device sharded checks
 #   scripts/ci.sh bench       # benchmark-regression gate (BENCH_ci.json)
 #   scripts/ci.sh robustness  # fault-injection suite + guard-overhead row
+#   scripts/ci.sh serve       # paged-scheduler suite + mixed-traffic throughput
 #   scripts/ci.sh analyze     # HLO contract auditor vs HLO_CONTRACTS.json
 #
 # Dependency install is FULLY optional: the suite degrades gracefully
@@ -91,6 +92,19 @@ robustness() {
         python benchmarks/serve_guard_overhead.py
 }
 
+serve() {
+    # continuous-batching scheduler suite (paged KV allocator, admission/
+    # shed/churn isolation, zero-recompile pin, shim bitwise equivalence)
+    # plus the standalone mixed-traffic throughput benchmark, which
+    # HARD-fails if the scheduler loses to the fixed-batch loop on
+    # useful tokens/s (unlike the bench gate's WARN, this run is the
+    # dedicated signal).
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m pytest -q tests/test_scheduler.py
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python benchmarks/serve_throughput.py
+}
+
 analyze() {
     # HLO contract auditor: trace every registered production path
     # (train step, fp32/int8 prefill+decode, guarded decode, all four
@@ -113,7 +127,8 @@ case "$cmd" in
     multidev)   install_extras; multidev ;;
     bench)      install_extras; bench "$@" ;;
     robustness) install_extras; robustness ;;
+    serve)      install_extras; serve ;;
     analyze)    install_extras; analyze "$@" ;;
-    all)        install_extras; tier1; multidev; bench; robustness; analyze ;;
-    *) echo "usage: scripts/ci.sh [tier1|multidev|bench|robustness|analyze|all]" >&2; exit 2 ;;
+    all)        install_extras; tier1; multidev; bench; robustness; serve; analyze ;;
+    *) echo "usage: scripts/ci.sh [tier1|multidev|bench|robustness|serve|analyze|all]" >&2; exit 2 ;;
 esac

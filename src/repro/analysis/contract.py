@@ -317,6 +317,64 @@ def production_contracts() -> List[HloContract]:
                          d_model=cfg.d_model, expect_weight_concats=0,
                          donated_params=donated_cache)
 
+    # -- paged serving (PR 8): scheduler decode + chunked prefill ----------
+    lanes, page = b, 16
+    ppl = -(-max_len // page)          # pages per lane for prompt+new
+    chunk = 16
+
+    def paged_donated(int8: bool) -> Tuple[int, ...]:
+        model = _model()
+        aparams = model.abstract_params()
+        if int8:
+            aparams = jax.eval_shape(model.quantize_params_for_serving,
+                                     aparams)
+        n_p = len(jax.tree_util.tree_leaves(aparams))
+        n_c = len(jax.tree_util.tree_leaves(
+            model.abstract_paged_cache(lanes * ppl, page)))
+        return tuple(range(n_p, n_p + n_c))
+
+    def trace_paged_decode(scfg_kw: Dict[str, Any]):
+        def tr():
+            from repro.serve.engine import ServeEngine
+            lowered, _ = ServeEngine.paged_decode_lowered(
+                _model(), serve_cfg(**scfg_kw), lanes, ppl, page)
+            return lowered.compile().as_text()
+        return tr
+
+    def trace_prefill_chunk(scfg_kw: Dict[str, Any]):
+        def tr():
+            from repro.serve.engine import ServeEngine
+            lowered, _ = ServeEngine.prefill_chunk_lowered(
+                _model(), serve_cfg(**scfg_kw), lanes, chunk, ppl, page)
+            return lowered.compile().as_text()
+        return tr
+
+    def paged_guard_invariance() -> List[Finding]:
+        """Stronger than the dense-decode variant: the paged decode step
+        never even SEES the guard config (guards live in the fused pick),
+        so the guarded and unguarded programs must be byte-identical."""
+        from repro.serve.engine import ServeEngine
+        model = _model()
+        on, _ = ServeEngine.paged_decode_lowered(
+            model, serve_cfg(), lanes, ppl, page)
+        off, _ = ServeEngine.paged_decode_lowered(
+            model, serve_cfg(guards=False, on_nonfinite="off"),
+            lanes, ppl, page)
+        if on.compile().as_text() != off.compile().as_text():
+            return [Finding(
+                "contract", "guards-changed-paged-decode-hlo", "error",
+                "decode_paged_guarded",
+                "paged decode-step HLO differs with guards on vs off — "
+                "the scheduler's guards ride in the pick dispatch and "
+                "must never reshape the decode program")]
+        return []
+
+    paged_decode_expect = dict(single_dev, gemm_out_cols=packed,
+                               expect_gemm_dispatches=1,
+                               d_model=cfg.d_model,
+                               expect_weight_concats=0,
+                               donated_params=paged_donated(int8=False))
+
     contracts = [
         HloContract(
             "train_step",
@@ -359,6 +417,41 @@ def production_contracts() -> List[HloContract]:
             trace_decode(dict(int8=True)),
             expect=dict(decode_expect, int8_clean=True,
                         donated_params=decode_donated(int8=True))),
+        HloContract(
+            "decode_paged_fp32",
+            "scheduler paged decode step, fp32: page pools donated, "
+            "single packed-QKV dispatch",
+            trace_paged_decode(dict(guards=False, on_nonfinite="off")),
+            expect=paged_decode_expect),
+        HloContract(
+            "decode_paged_guarded",
+            "scheduler paged decode step under the production guarded "
+            "config — must be byte-identical to decode_paged_fp32",
+            trace_paged_decode({}),
+            expect=paged_decode_expect,
+            extra_checks=(paged_guard_invariance,)),
+        HloContract(
+            "decode_paged_int8",
+            "scheduler int8 paged decode step: zero fp32 dequant "
+            "bounces, page pools donated",
+            trace_paged_decode(dict(int8=True)),
+            expect=dict(paged_decode_expect, int8_clean=True,
+                        donated_params=paged_donated(int8=True))),
+        HloContract(
+            "prefill_chunk_fp32",
+            "scheduler chunked-prefill step (all lanes, fixed chunk): "
+            "page pools donated",
+            trace_prefill_chunk({}),
+            expect=dict(single_dev, gemm_out_cols=packed,
+                        d_model=cfg.d_model, expect_weight_concats=0)),
+        HloContract(
+            "prefill_chunk_int8",
+            "scheduler int8 chunked-prefill step: zero fp32 dequant "
+            "bounces",
+            trace_prefill_chunk(dict(int8=True)),
+            expect=dict(single_dev, int8_clean=True,
+                        gemm_out_cols=packed, d_model=cfg.d_model,
+                        expect_weight_concats=0)),
     ]
 
     # -- collective-matmul schedule cells (8 fake devices, mesh 2x4) -------

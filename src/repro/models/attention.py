@@ -407,6 +407,90 @@ def update_cache(k_cache, v_cache, k_new, v_new, pos, *, ring: bool):
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache (serving): pooled fixed-size pages + lane -> page-table
+# indirection, so serving lanes admit/retire requests without re-jitting
+# ---------------------------------------------------------------------------
+
+def paged_update(k_pool, v_pool, k_new, v_new, positions, page_table):
+    """Scatter freshly projected K/V rows through the page table.
+
+    ``k_pool``/``v_pool`` [NP, PS, kv, hd] — the shared page pools; row
+    NP-1 is the trash page (never read).
+    ``k_new``/``v_new``   [B, S, kv, hd] post-rope projections.
+    ``positions``         [B, S] global positions; -1 marks an inactive
+    slot (an idle lane during decode, the padded tail of the last prefill
+    chunk).
+    ``page_table``        [B, P] physical page id per logical page, -1 =
+    unmapped.
+
+    Logical position p of lane b lives at physical page
+    ``page_table[b, p // PS]``, slot ``p % PS`` (pages are allocated in
+    order, so logical index == global position).  Writes from inactive
+    slots or through unmapped table entries are routed to the trash page:
+    the scatter shape never depends on how many lanes are live, which is
+    what keeps one decode jit serving arbitrary request churn.
+    """
+    n_pool, ps = k_pool.shape[0], k_pool.shape[1]
+    b, s = positions.shape
+    valid = positions >= 0
+    lpage = jnp.clip(positions // ps, 0, page_table.shape[1] - 1)
+    slot = jnp.where(valid, positions % ps, 0)
+    phys = jnp.take_along_axis(page_table, lpage, axis=1)
+    phys = jnp.where(valid & (phys >= 0), phys, n_pool - 1)
+    pf, sf = phys.reshape(-1), slot.reshape(-1)
+    kf = k_new.reshape(b * s, *k_new.shape[2:]).astype(k_pool.dtype)
+    vf = v_new.reshape(b * s, *v_new.shape[2:]).astype(v_pool.dtype)
+    return k_pool.at[pf, sf].set(kf), v_pool.at[pf, sf].set(vf)
+
+
+def paged_attention(q, k_pool, v_pool, page_table, positions, *,
+                    kind="global", window=0, softcap=None) -> jnp.ndarray:
+    """q [B, S, kv, g, hd] against the paged pools -> [B, S, kv, g, hd].
+
+    Gathers each lane's mapped pages into a logical [B, P*PS, kv, hd]
+    view (logical index == global position) and runs the decode mask /
+    softmax generalized to S >= 1: a decode step is just a chunk of size
+    one, so chunked prefill and decode round identically.  Unmapped
+    pages gather the trash page but are masked out of both the max and
+    the probability sum, so their (finite) garbage contributes exact
+    zeros — a lane's output is bitwise independent of its neighbors.
+    Window kinds mask by position (paged lanes keep full history; there
+    is no ring buffer, so the summation order never depends on wrap).
+    """
+    n_pool, ps = k_pool.shape[0], k_pool.shape[1]
+    b, p_max = page_table.shape
+    hd = q.shape[-1]
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    mapped = page_table >= 0
+    ptc = jnp.where(mapped, page_table, n_pool - 1)
+    kl = k_pool[ptc].reshape(b, p_max * ps, *k_pool.shape[2:])
+    vl = v_pool[ptc].reshape(b, p_max * ps, *v_pool.shape[2:])
+    s_mat = jnp.einsum("bqkgd,bKkd->bkgqK", qf, kl.astype(jnp.float32))
+    if softcap:
+        s_mat = softcap * jnp.tanh(s_mat / softcap)
+
+    kvpos = jnp.arange(p_max * ps)
+    kvalid = jnp.repeat(mapped, ps, axis=1)                  # [B, L]
+    qpos = positions                                         # [B, S]
+    mask = (kvalid[:, None, :]
+            & (kvpos[None, None, :] <= qpos[:, :, None])
+            & (qpos[:, :, None] >= 0))
+    if kind == "local":
+        mask &= (qpos[:, :, None] - kvpos[None, None, :]) < window
+    elif kind == "chunked":
+        mask &= ((qpos[:, :, None] // window)
+                 == (kvpos[None, None, :] // window))
+    m4 = mask[:, None, None]                                 # [B,1,1,S,L]
+    s_mat = jnp.where(m4, s_mat, _NEG)
+    m = jnp.max(s_mat, axis=-1, keepdims=True)
+    p = jnp.exp(s_mat - m)
+    p = jnp.where(m4, p, 0.0)
+    out = jnp.einsum("bkgqK,bKkd->bkgqd", p, vl.astype(jnp.float32))
+    out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
+    return jnp.einsum("bkgqd->bqkgd", out).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # the full attention sub-block (projections + core + output)
 # ---------------------------------------------------------------------------
 
@@ -428,11 +512,17 @@ def attention_apply(
     use_rope: bool = True,
     x_seq_sharded: bool = False,
     return_kv: bool = False,
+    page_table: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]], bool]:
     """Returns (attn_out, new_cache, out_is_seq_sharded).
 
     Modes: cache None -> train/prefill over the full sequence;
-    cache present -> single-token decode (S == 1) at position ``pos``.
+    cache present -> single-token decode (S == 1) at position ``pos``;
+    cache present + ``page_table`` -> paged serving (cache is the
+    ``{"kp", "vp"}`` page pools, ``positions`` is [B, S] per-token global
+    positions with -1 marking inactive slots — covers both the
+    multi-lane decode step (S == 1) and a chunked-prefill chunk (B == 1)
+    with the same write-then-attend math).
     ``kv_override`` supplies external K/V activations (cross-attention).
     ``x_seq_sharded``: x is the SP-sharded residual; the QKV fused path
     performs the gather internally.
@@ -475,6 +565,17 @@ def attention_apply(
                               prefix_len=prefix_len,
                               softcap=cfg.attn_softcap,
                               q_chunk=q_chunk, kv_chunk=kv_chunk)
+    elif page_table is not None:
+        # paged serving: scatter the new K/V through the page table, then
+        # attend over the lane's gathered logical history.  The SAME path
+        # serves the L-lane decode step and each prefill chunk, so the
+        # two phases round identically by construction.
+        qg = q.reshape(b, s, n_kv, g, hd)
+        kc, vc = paged_update(cache["kp"], cache["vp"], k, v, positions,
+                              page_table)
+        new_cache = dict(cache, kp=kc, vp=vc)
+        out = paged_attention(qg, kc, vc, page_table, positions, kind=kind,
+                              window=cfg.window, softcap=cfg.attn_softcap)
     else:
         qg = q.reshape(b, s, n_kv, g, hd)
         if kv_override is None:

@@ -219,7 +219,7 @@ class Model:
         return cfg.rope_theta
 
     def _block(self, btype: str, bp, h, *, positions, mode, cache, pos,
-               enc_out, prefix_len, q_chunk=512):
+               enc_out, prefix_len, q_chunk=512, page_table=None):
         """h: residual stream (seq-sharded under SP). Returns
         (h, new_cache, aux)."""
         cfg, ctx = self.cfg, self.ctx
@@ -227,7 +227,7 @@ class Model:
         xn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
         # fused-QKV path consumes the SP-sharded stream directly (the
         # gather happens inside one shard_map; backward is RS, not AR)
-        fuse_qkv = (btype in _ATTN_KINDS and mode != "decode"
+        fuse_qkv = (btype in _ATTN_KINDS and mode not in ("decode", "paged")
                     and _sp_active(xn, ctx)
                     and cfg.q_dim % ctx.model == 0
                     and cfg.kv_dim % ctx.model == 0)
@@ -247,7 +247,8 @@ class Model:
                     theta=self._theta(btype), positions=positions,
                     prefix_len=prefix_len, q_chunk=q_chunk,
                     cache=c_attn, pos=pos,
-                    use_rope=not cfg.encdec, x_seq_sharded=fuse_qkv)
+                    use_rope=not cfg.encdec, x_seq_sharded=fuse_qkv,
+                    page_table=page_table)
                 if nc is not None:
                     new_cache["attn"] = nc
         elif btype in ("rglru", "mlstm", "slstm"):
@@ -368,9 +369,15 @@ class Model:
         return rmsnorm(h, params["encoder"]["final_norm"], cfg.norm_eps)
 
     def forward(self, params, batch, *, mode="train", cache=None,
-                pos=None):
+                pos=None, page_table=None):
         """Returns (h_final, new_cache, aux).  h_final is seq-sharded under
-        SP (train/prefill) or [B, 1, D] (decode)."""
+        SP (train/prefill) or [B, 1, D] (decode).
+
+        ``mode="paged"``: paged serving — ``cache`` holds the page pools
+        (``paged_cache_defs``), ``pos`` is a [B, S] array of per-token
+        global positions (-1 = inactive slot), and ``page_table`` [B, P]
+        maps each lane's logical pages to pool rows.  Covers both the
+        multi-lane decode step (S == 1) and a chunked-prefill chunk."""
         cfg, ctx = self.cfg, self.ctx
         h, prefix_len = self._embed_inputs(params, batch, mode, pos)
 
@@ -383,6 +390,8 @@ class Model:
 
         if mode == "decode":
             positions = pos + jnp.zeros((1,), jnp.int32)
+        elif mode == "paged":
+            positions = pos                     # [B, S] per-token, -1 idle
         else:
             positions = jnp.arange(h.shape[1])
             h = scatter_seq(h, ctx)
@@ -393,7 +402,8 @@ class Model:
         def one_block(bt, hh, bp, gc):
             return self._block(bt, bp, hh, positions=positions, mode=mode,
                                cache=gc, pos=pos, enc_out=enc_out,
-                               prefix_len=prefix_len)
+                               prefix_len=prefix_len,
+                               page_table=page_table)
 
         if remat:
             # PER-BLOCK remat: during a group's backward only ONE layer's
@@ -488,6 +498,65 @@ class Model:
                                        cfg.final_softcap)
         return logits[:, 0], new_cache
 
+    # -- paged serving entry points (continuous batching) -----------------------
+
+    @property
+    def supports_paged_serving(self) -> bool:
+        """The paged scheduler covers single-device attention-only decoder
+        stacks: recurrent mixers (rglru/mlstm/slstm) carry dense state
+        caches with no page indirection, enc-dec and prefix-LM archs
+        prefill through extra inputs the chunk loop does not model, and
+        multi-device meshes shard the dense cache layout.  Engines fall
+        back to the fixed-batch loop for those."""
+        cfg = self.cfg
+        return (self.mesh.devices.size == 1
+                and not cfg.encdec and not cfg.prefix_tokens
+                and all(bt in _ATTN_KINDS
+                        for bt in (*cfg.block_pattern, *cfg.tail_blocks)))
+
+    def decode_step_paged(self, params, cache, token, positions,
+                          page_table):
+        """One decode step for every serving lane through the page pools.
+
+        token [L, 1] each lane's previous pick; positions [L] the global
+        position being written (-1 = idle lane: its write lands on the
+        trash page and its logits row is garbage the host ignores);
+        page_table [L, P].  Returns (logits [L, Vp] vocab-sharded, cache).
+        The jit shape depends only on (L, pools, P) — never on which
+        requests occupy the lanes, so one compiled program serves
+        arbitrary admit/retire churn."""
+        cfg, ctx = self.cfg, self.ctx
+        h, new_cache, _ = self.forward(
+            params, {"tokens": token}, mode="paged", cache=cache,
+            pos=positions[:, None], page_table=page_table)
+        logits = vocab_parallel_logits(h, self.head_weights(params), ctx,
+                                       cfg.final_softcap)
+        return logits[:, 0], new_cache
+
+    def prefill_chunk(self, params, cache, tokens, positions, page_table,
+                      last_idx):
+        """One fixed-size prompt chunk for EVERY serving lane at once
+        (write-then-attend, the same math as the decode step, so prefill
+        and decode round identically).
+
+        tokens [L, C]; positions [L, C] global positions (-1 marks idle
+        lanes and the padded tail of a final partial chunk — those writes
+        go to the trash page and are overwritten by decode before any
+        mask admits them); page_table [L, P]; last_idx [L] index of each
+        lane's final real token in THIS chunk (-1 = idle lane, clamped to
+        0: its gathered row is garbage the host ignores).  Returns
+        (logits [L, Vp] at each lane's last real token, cache) — only the
+        rows of lanes finishing their prompt this chunk seed a pick."""
+        cfg, ctx = self.cfg, self.ctx
+        h, new_cache, _ = self.forward(
+            params, {"tokens": tokens}, mode="paged", cache=cache,
+            pos=positions, page_table=page_table)
+        idx = jnp.clip(last_idx, 0)
+        hl = h[jnp.arange(h.shape[0]), idx][:, None]        # [L, 1, D]
+        logits = vocab_parallel_logits(hl, self.head_weights(params), ctx,
+                                       cfg.final_softcap)
+        return logits[:, 0], new_cache
+
     # -- caches -----------------------------------------------------------------
 
     def _cache_bs_spec(self, batch: int):
@@ -548,6 +617,41 @@ class Model:
 
     def cache_specs(self, batch: int, max_len: int):
         return pm.specs(self.cache_defs(batch, max_len))
+
+    def paged_cache_defs(self, n_pages: int, page_size: int
+                         ) -> Dict[str, Any]:
+        """Paged serving cache: per attention layer, K/V page POOLS of
+        shape [n_pages + 1, page_size, kv, hd] shared by every lane
+        through the page table (row n_pages is the trash page — written
+        by idle lanes and padded chunk tails, never read).  Replaces the
+        per-(batch, max_len) dense layout, which is what decouples the
+        decode jit shape from request shapes."""
+        if not self.supports_paged_serving:
+            raise ValueError(
+                "paged serving needs a single-device attention-only "
+                "decoder (no recurrent mixers / enc-dec / prefix-LM); "
+                f"got pattern {self.cfg.block_pattern} on "
+                f"{self.mesh.devices.size} device(s)")
+        cfg = self.cfg
+        shape = (n_pages + 1, page_size, cfg.n_kv_heads, cfg.hd)
+
+        def block() -> Dict[str, Any]:
+            return {"attn": {
+                "kp": ParamDef(shape, P(), init="zeros", dtype="bfloat16"),
+                "vp": ParamDef(shape, P(), init="zeros", dtype="bfloat16"),
+            }}
+
+        group = {f"b{i}": block()
+                 for i, _ in enumerate(cfg.block_pattern)}
+        defs: Dict[str, Any] = {}
+        if cfg.n_groups > 0:
+            defs["groups"] = _stack_defs(group, cfg.n_groups)
+        defs["tail"] = {f"t{i}": block()
+                        for i, _ in enumerate(cfg.tail_blocks)}
+        return defs
+
+    def abstract_paged_cache(self, n_pages: int, page_size: int):
+        return pm.abstract(self.paged_cache_defs(n_pages, page_size))
 
 
 def _sinusoid(start, length, d_model, dtype):

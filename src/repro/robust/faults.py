@@ -111,21 +111,62 @@ class FaultPlan:
         copy-on-write: untouched steps return ``logits`` unchanged)."""
         if not self.enabled:
             return logits
-        hits = [f for f in self.logit_faults if f.step == step]
-        if not hits:
+        hits = [(f, lane) for f in self.logit_faults if f.step == step
+                for lane in f.lanes]
+        return _poison_rows(logits, hits)
+
+    # -- scheduler hooks ------------------------------------------------------
+    #
+    # The continuous-batching loop has no global step: each lane carries
+    # its own request at its own step.  These variants take the per-lane
+    # step vector (-1 = lane idle/stale this iteration) and interpret
+    # ``LogitFault.lanes`` / ``StallFault.step`` against the step of the
+    # REQUEST currently in that lane — on the lockstep fixed-batch shim
+    # they reduce exactly to the legacy hooks above.
+
+    def maybe_stall_lanes(self, lane_steps, fired: set,
+                          sleep=time.sleep) -> None:
+        """Per-lane stall: fires each StallFault once per drain (tracked
+        in the caller-owned ``fired`` set) when any live lane reaches its
+        step — under churn several iterations can match, and a stall that
+        re-fired every one would model N faults, not one."""
+        if not self.enabled:
+            return
+        for i, f in enumerate(self.stalls):
+            if i in fired:
+                continue
+            if any(int(t) == f.step for t in lane_steps if t >= 0):
+                fired.add(i)
+                sleep(f.seconds)
+
+    def perturb_logits_lanes(self, lane_steps, logits) -> jnp.ndarray:
+        """Per-lane perturb: fault (step, lane) hits when the request in
+        ``lane`` is at ``step`` this iteration (copy-on-write like
+        ``perturb_logits``)."""
+        if not self.enabled:
             return logits
-        arr = np.array(logits, copy=True)
-        for f in hits:
-            for lane in f.lanes:
-                if f.kind == "nan":
-                    arr[lane, :] = np.nan
-                elif f.kind == "inf":
-                    arr[lane, :] = np.inf
-                elif f.kind == "ninf":
-                    arr[lane, :] = -np.inf
-                else:  # 'scale'
-                    arr[lane, :] *= f.scale
-        return jnp.asarray(arr)
+        hits = [(f, lane) for f in self.logit_faults for lane in f.lanes
+                if 0 <= lane < len(lane_steps)
+                and int(lane_steps[lane]) == f.step]
+        return _poison_rows(logits, hits)
+
+
+def _poison_rows(logits: jnp.ndarray, hits) -> jnp.ndarray:
+    """Apply (fault, lane) pairs to logit rows; no hits returns the SAME
+    object (the copy-on-write contract both hook flavors share)."""
+    if not hits:
+        return logits
+    arr = np.array(logits, copy=True)
+    for f, lane in hits:
+        if f.kind == "nan":
+            arr[lane, :] = np.nan
+        elif f.kind == "inf":
+            arr[lane, :] = np.inf
+        elif f.kind == "ninf":
+            arr[lane, :] = -np.inf
+        else:  # 'scale'
+            arr[lane, :] *= f.scale
+    return jnp.asarray(arr)
 
 
 # -- on-disk checkpoint corruption -------------------------------------------

@@ -55,7 +55,8 @@ class GenerateResult:
                    completion point; shed lanes are all-pad).
     ``status``     length-B list of the statuses above.
     ``fault_step`` [B] step index at which the lane left ``ok`` (-1 if it
-                   never did; 0 for shed lanes — rejected at admission).
+                   never did — including shed lanes, which are rejected
+                   at admission before any step runs).
     ``n_steps``    decode steps actually executed.
     ``timed_out``  True when the wall-clock budget ended the loop.
     ``admitted``   lanes actually decoded (B - admitted were shed).

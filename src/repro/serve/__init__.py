@@ -1,3 +1,15 @@
+from repro.serve.api import Request, RequestOutput, SamplingParams
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.kv_cache import PageAllocator, PagedKVCache
+from repro.serve.scheduler import PagedScheduler
 
-__all__ = ["ServeEngine", "ServeConfig"]
+__all__ = [
+    "ServeEngine",
+    "ServeConfig",
+    "Request",
+    "RequestOutput",
+    "SamplingParams",
+    "PageAllocator",
+    "PagedKVCache",
+    "PagedScheduler",
+]

@@ -1,0 +1,124 @@
+"""Paged KV cache: a free-list page allocator plus the lane page table.
+
+The device side is dumb on purpose — per attention layer, one K and one
+V pool of ``n_pages + 1`` fixed-size pages (the extra row is the trash
+page idle writes land on), built by ``Model.paged_cache_defs`` and
+threaded through the decode/prefill-chunk jits as a donated buffer.  All
+policy lives HERE on the host: which physical pages a request owns, and
+the [n_lanes, pages_per_lane] int32 table the device reads them through.
+
+Pages are handed out low-id-first from a LIFO free list, so a retired
+request's pages are immediately recycled by the next admission; the
+logical order within a lane is always ascending positions, which is what
+lets ``paged_attention`` treat logical page index as global position.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class PageAllocator:
+    """Free-list allocator over ``n_pages`` fixed-size pages.
+
+    ``alloc(n)`` returns ``n`` page ids or ``None`` when the pool cannot
+    satisfy the request right now (the scheduler's signal to queue or
+    shed — never an exception: page exhaustion is a load condition, not
+    a bug).  ``free`` returns pages to the list LIFO, so a hot pool keeps
+    reusing the same recently-touched pages."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"n_pages must be >= 1, got {n_pages}")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n < 1:
+            raise ValueError(f"alloc needs n >= 1, got {n}")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not (0 <= p < self.n_pages):
+                raise ValueError(f"freeing unknown page {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+        self._free.extend(reversed(pages))
+
+
+class PagedKVCache:
+    """Host-side owner of the device page pools and the lane page table.
+
+    ``pages_per_lane`` bounds one request's footprint (the page-table
+    width — a jit-shape constant); ``n_pages`` bounds the whole pool.
+    ``admit(lane, total_len)`` maps a lane for a request of
+    ``total_len = prompt + max_new`` positions, ``release(lane)`` recycles
+    its pages.  ``table_device()`` lazily re-uploads the table only when
+    an admission/retirement dirtied it — steady-state decode re-serves
+    the cached device array.
+    """
+
+    def __init__(self, model, n_lanes: int, n_pages: int, page_size: int,
+                 pages_per_lane: int):
+        from repro.models import param as pm
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if pages_per_lane < 1:
+            raise ValueError(
+                f"pages_per_lane must be >= 1, got {pages_per_lane}")
+        self.n_lanes = n_lanes
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.pages_per_lane = pages_per_lane
+        self.pools: Dict[str, Any] = pm.initialize(
+            model.paged_cache_defs(n_pages, page_size), 0)
+        self.allocator = PageAllocator(n_pages)
+        self.table = np.full((n_lanes, pages_per_lane), -1, np.int32)
+        self.lane_pages: List[Optional[List[int]]] = [None] * n_lanes
+        self._table_dev = None
+
+    def pages_needed(self, total_len: int) -> int:
+        return -(-total_len // self.page_size)
+
+    def fits_ever(self, total_len: int) -> bool:
+        """Could this request EVER be admitted (empty pool, any lane)?
+        False means shed it now — queueing would deadlock."""
+        need = self.pages_needed(total_len)
+        return need <= min(self.pages_per_lane, self.n_pages)
+
+    def admit(self, lane: int, total_len: int) -> bool:
+        """Map ``lane`` for a ``total_len``-position request.  False =
+        transient page exhaustion (caller keeps the request queued)."""
+        assert self.lane_pages[lane] is None, f"lane {lane} already mapped"
+        pages = self.allocator.alloc(self.pages_needed(total_len))
+        if pages is None:
+            return False
+        self.lane_pages[lane] = pages
+        self.table[lane] = -1
+        self.table[lane, :len(pages)] = pages
+        self._table_dev = None
+        return True
+
+    def release(self, lane: int) -> None:
+        pages = self.lane_pages[lane]
+        if pages is None:
+            return
+        self.allocator.free(pages)
+        self.lane_pages[lane] = None
+        self.table[lane] = -1
+        self._table_dev = None
+
+    def table_device(self) -> jnp.ndarray:
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self.table)
+        return self._table_dev
