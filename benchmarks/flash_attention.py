@@ -1,0 +1,146 @@
+"""Flash attention vs the einsum paths it replaces.
+
+Two comparisons, both at serving-scale shapes (long KV histories —
+the regime the kernels exist for; at toy lengths the per-tile dispatch
+overhead of the tiled path dominates and the single big einsum wins):
+
+  * ``decode``  — the tiled flash-decode (per-tile dots at the cache's
+    storage dtype, deterministic rank-order split combine) against the
+    FIXED einsum fallback (single big dot, fp32 accumulation via
+    ``preferred_element_type``).  Note the baseline is the repaired
+    einsum, not the old full-cache-upcast bug — the speedup reported
+    here is purely the tiling win, on top of the bugfix both paths
+    share.
+  * ``prefill`` — the chunked online-softmax scan against a naive
+    attention that materializes the full [B, H, Sq, Skv] logit matrix
+    at fp32.
+
+The invariant row ``flash_beats_einsum`` (decode rows only) must hold:
+this standalone entry point fails hard on it; the bench gate's single
+pass reports a miss as WARN (host-noise policy, same as
+``sched_beats_fixed``).
+
+Run directly for a human-readable report:
+
+    PYTHONPATH=src python benchmarks/flash_attention.py
+"""
+import os
+import sys
+import time
+
+import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SEED = 0
+N_CALLS = 7     # median-of-N inside each timed pass
+N_PASSES = 3    # interleaved passes per variant; min-of-medians gates
+
+# decode: [b, kv_len, n_kv_heads, group, head_dim] — long-history lanes
+DECODE_SHAPES = [
+    (4, 4096, 8, 4, 64),
+    (8, 2048, 4, 4, 128),
+]
+# prefill: [b, seq, n_heads, head_dim]
+PREFILL_SHAPE = (2, 1024, 8, 64)
+
+
+def _median_us(fn, args, n=N_CALLS):
+    import jax
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(ts))
+
+
+def _interleaved(fa, fb, args):
+    """Warm both, then N_PASSES interleaved median-of-N_CALLS sweeps per
+    variant; returns (min_median_a_us, min_median_b_us) so a host-
+    contention spike during one pass can't flip the comparison."""
+    import jax
+    jax.block_until_ready(fa(*args))
+    jax.block_until_ready(fb(*args))
+    a_runs, b_runs = [], []
+    for _ in range(N_PASSES):
+        a_runs.append(_median_us(fa, args))
+        b_runs.append(_median_us(fb, args))
+    return min(a_runs), min(b_runs)
+
+
+def _naive_prefill(q, k, v):
+    """Full-logit-matrix causal attention: the O(S^2) fp32 score tensor
+    the chunked scan exists to avoid materializing."""
+    import jax
+    import jax.numpy as jnp
+    hd = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32)
+    s = s * jnp.float32(hd) ** -0.5
+    sq = q.shape[1]
+    mask = jnp.tril(jnp.ones((sq, sq), bool))
+    s = jnp.where(mask[None, None], s, jnp.float32(-1e30))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def rows():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ops as kops
+    from repro.models import attention as A
+
+    out = []
+    key = jax.random.PRNGKey(SEED)
+
+    for b, kv_len, n_kv, g, hd in DECODE_SHAPES:
+        ks = jax.random.split(key, 3)
+        k_cache = jax.random.normal(ks[0], (b, kv_len, n_kv, hd),
+                                    jnp.bfloat16)
+        v_cache = jax.random.normal(ks[1], (b, kv_len, n_kv, hd),
+                                    jnp.bfloat16)
+        q = jax.random.normal(ks[2], (b, 1, n_kv, g, hd), jnp.bfloat16)
+        pos = jnp.int32(kv_len - 1)
+
+        flash = jax.jit(lambda q, k, v, p: kops.flash_decode(q, k, v, p))
+        einsum = jax.jit(
+            lambda q, k, v, p: A.decode_attention_einsum(q, k, v, p))
+        f_us, e_us = _interleaved(flash, einsum, (q, k_cache, v_cache, pos))
+        out.append((
+            f"flash_attention/decode_b{b}_L{kv_len}_h{n_kv}x{g}_d{hd}",
+            f_us,
+            f"flash_us={f_us:.1f};einsum_us={e_us:.1f};"
+            f"speedup={e_us / f_us:.2f};"
+            f"flash_beats_einsum={f_us < e_us}"))
+
+    b, sq, n_h, hd = PREFILL_SHAPE
+    ks = jax.random.split(jax.random.fold_in(key, 1), 3)
+    q = jax.random.normal(ks[0], (b, sq, n_h, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (b, sq, n_h, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, sq, n_h, hd), jnp.bfloat16)
+    flash_p = jax.jit(lambda q, k, v: A.flash_attention(
+        q, k, v, q_chunk=256, kv_chunk=256))
+    naive_p = jax.jit(_naive_prefill)
+    f_us, n_us = _interleaved(flash_p, naive_p, (q, k, v))
+    out.append((
+        f"flash_attention/prefill_b{b}_S{sq}_h{n_h}_d{hd}",
+        f_us,
+        f"flash_us={f_us:.1f};naive_us={n_us:.1f};"
+        f"ratio_vs_naive={f_us / n_us:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    print("name,us_per_call,derived")
+    ok = True
+    for name, us, derived in rows():
+        print(f"{name},{us:.2f},{derived}")
+        if "flash_beats_einsum=False" in derived:
+            ok = False
+    print("ALL_OK" if ok else "FLASH_SLOWER_THAN_EINSUM")
+    sys.exit(0 if ok else 1)

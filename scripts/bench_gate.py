@@ -53,7 +53,7 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
     [invariant violations])."""
     sys.path.insert(0, os.path.join(_ROOT, "src"))
     sys.path.insert(0, _ROOT)
-    from benchmarks import (fused_epilogue, int8_decode,
+    from benchmarks import (flash_attention, fused_epilogue, int8_decode,
                             serve_guard_overhead, serve_throughput,
                             tpu_matmul)
 
@@ -78,6 +78,11 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
     # timing-derived (WARN here, hard fail in the standalone entry point
     # — same noise policy as fused_le_unfused)
     rows += serve_throughput.rows()
+    # flash_attention compares the tiled flash-decode against the fixed
+    # einsum fallback at serving-scale KV lengths; flash_beats_einsum is
+    # timing-derived (WARN here, hard fail in the standalone entry point
+    # — same noise policy as sched_beats_fixed)
+    rows += flash_attention.rows()
 
     out: Dict[str, float] = {}
     violations: List[str] = []
@@ -109,6 +114,13 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
             # the gate's single pass only warns
             print(f"bench_gate: WARN {name} scheduler measured slower "
                   f"than the fixed loop this pass ({derived})")
+        if "flash_beats_einsum=False" in derived:
+            # timing-derived (same policy as sched_beats_fixed): the
+            # standalone flash_attention entry point fails hard on this,
+            # the gate's single pass only warns
+            print(f"bench_gate: WARN {name} flash decode measured "
+                  f"slower than the einsum fallback this pass "
+                  f"({derived})")
         if "guard_overhead_lt_2pct=False" in derived:
             # timing-derived (same policy as fused_le_unfused): the
             # standalone benchmark entry point fails hard on this, the

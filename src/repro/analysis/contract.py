@@ -187,7 +187,15 @@ def diff_baseline(reports: Sequence[TraceReport],
 # the production registry
 # ---------------------------------------------------------------------------
 
-_SMOKE_B, _SMOKE_S, _SMOKE_NEW = 2, 16, 8
+# NEW is sized so the decode-path KV view spans several flash tiles
+# (256 positions = 8 tiles of 32) AND one pool's logical view
+# (b * max_len * n_kv * hd = 16384 elems) sits far above every
+# legitimate program-requested widening convert — the flash paths'
+# per-tile converts top out at 2048 elems, the chunk-prefill logits
+# upcast at 8192 — which is the gap that gives the big-upcast audit
+# teeth: an einsum path that fp32-materializes a whole cache/pool per
+# step converts >= 16384 elems in one op and trips it
+_SMOKE_B, _SMOKE_S, _SMOKE_NEW = 2, 16, 240
 
 
 def _smoke_cfg():
@@ -229,6 +237,27 @@ def production_contracts() -> List[HloContract]:
     # into production programs) and collective-free (model axis of 1)
     single_dev = {"forbid_f64": True, "allowed_collectives": ()}
 
+    # one K (or V) pool's full logical view in elements: any float
+    # widening convert this big in a decode-path trace means a whole
+    # cache/pool was materialized at fp32 in one step — the bug the
+    # flash kernels' per-tile converts exist to kill.  The audit runs on
+    # the PRE-optimization module (``lowered.as_text('hlo')``): the CPU
+    # backend's dot legalization inserts (and hoists) its own full-array
+    # converts post-optimization, so only the unoptimized module shows
+    # which converts the program asked for.
+    pool_view_elems = b * max_len * cfg.n_kv_heads * cfg.head_dim
+
+    def no_big_upcast(trace_unopt: Callable[[], str],
+                      limit: int = pool_view_elems
+                      ) -> Callable[[], List[Finding]]:
+        def check() -> List[Finding]:
+            from repro.analysis.passes import dtype_flow_pass
+            module = parse_hlo(trace_unopt())
+            found, _ = dtype_flow_pass(
+                module, {"forbid_big_upcast_elems": limit})
+            return [f for f in found if f.code == "full-pool-upcast"]
+        return check
+
     def trace_train():
         from repro.optim import AdamWConfig, abstract_opt_state
         from repro.train.step import jit_train_step
@@ -267,11 +296,13 @@ def production_contracts() -> List[HloContract]:
         from repro.serve.engine import ServeConfig
         return ServeConfig(max_new_tokens=new, **kw)
 
-    def trace_decode(scfg_kw: Dict[str, Any]):
+    def trace_decode(scfg_kw: Dict[str, Any], unopt: bool = False):
         def tr():
             from repro.serve.engine import ServeEngine
             lowered, _ = ServeEngine.decode_step_lowered(
                 _model(), serve_cfg(**scfg_kw), b, s)
+            if unopt:
+                return lowered.as_text(dialect="hlo")
             return lowered.compile().as_text()
         return tr
 
@@ -333,19 +364,23 @@ def production_contracts() -> List[HloContract]:
             model.abstract_paged_cache(lanes * ppl, page)))
         return tuple(range(n_p, n_p + n_c))
 
-    def trace_paged_decode(scfg_kw: Dict[str, Any]):
+    def trace_paged_decode(scfg_kw: Dict[str, Any], unopt: bool = False):
         def tr():
             from repro.serve.engine import ServeEngine
             lowered, _ = ServeEngine.paged_decode_lowered(
                 _model(), serve_cfg(**scfg_kw), lanes, ppl, page)
+            if unopt:
+                return lowered.as_text(dialect="hlo")
             return lowered.compile().as_text()
         return tr
 
-    def trace_prefill_chunk(scfg_kw: Dict[str, Any]):
+    def trace_prefill_chunk(scfg_kw: Dict[str, Any], unopt: bool = False):
         def tr():
             from repro.serve.engine import ServeEngine
             lowered, _ = ServeEngine.prefill_chunk_lowered(
                 _model(), serve_cfg(**scfg_kw), lanes, chunk, ppl, page)
+            if unopt:
+                return lowered.as_text(dialect="hlo")
             return lowered.compile().as_text()
         return tr
 
@@ -392,9 +427,12 @@ def production_contracts() -> List[HloContract]:
                         d_model=cfg.d_model, expect_weight_concats=0)),
         HloContract(
             "decode_fp32",
-            "engine decode step, fp32, guards off, KV cache donated",
+            "engine decode step, fp32, guards off, KV cache donated; "
+            "no full-cache fp32 upcast in the program",
             trace_decode(dict(guards=False, on_nonfinite="off")),
-            expect=decode_expect),
+            expect=decode_expect,
+            extra_checks=(no_big_upcast(trace_decode(
+                dict(guards=False, on_nonfinite="off"), unopt=True)),)),
         HloContract(
             "decode_guarded",
             "engine decode step under the production guarded config — "
@@ -416,13 +454,18 @@ def production_contracts() -> List[HloContract]:
             "dispatch, KV cache donated",
             trace_decode(dict(int8=True)),
             expect=dict(decode_expect, int8_clean=True,
-                        donated_params=decode_donated(int8=True))),
+                        donated_params=decode_donated(int8=True)),
+            extra_checks=(no_big_upcast(trace_decode(
+                dict(int8=True), unopt=True)),)),
         HloContract(
             "decode_paged_fp32",
             "scheduler paged decode step, fp32: page pools donated, "
-            "single packed-QKV dispatch",
+            "single packed-QKV dispatch; no full-pool fp32 upcast in "
+            "the program",
             trace_paged_decode(dict(guards=False, on_nonfinite="off")),
-            expect=paged_decode_expect),
+            expect=paged_decode_expect,
+            extra_checks=(no_big_upcast(trace_paged_decode(
+                dict(guards=False, on_nonfinite="off"), unopt=True)),)),
         HloContract(
             "decode_paged_guarded",
             "scheduler paged decode step under the production guarded "
@@ -436,14 +479,19 @@ def production_contracts() -> List[HloContract]:
             "bounces, page pools donated",
             trace_paged_decode(dict(int8=True)),
             expect=dict(paged_decode_expect, int8_clean=True,
-                        donated_params=paged_donated(int8=True))),
+                        donated_params=paged_donated(int8=True)),
+            extra_checks=(no_big_upcast(trace_paged_decode(
+                dict(int8=True), unopt=True)),)),
         HloContract(
             "prefill_chunk_fp32",
             "scheduler chunked-prefill step (all lanes, fixed chunk): "
-            "page pools donated",
+            "page pools donated; no full-pool fp32 upcast in the "
+            "program",
             trace_prefill_chunk({}),
             expect=dict(single_dev, gemm_out_cols=packed,
-                        d_model=cfg.d_model, expect_weight_concats=0)),
+                        d_model=cfg.d_model, expect_weight_concats=0),
+            extra_checks=(no_big_upcast(
+                trace_prefill_chunk({}, unopt=True)),)),
         HloContract(
             "prefill_chunk_int8",
             "scheduler int8 chunked-prefill step: zero fp32 dequant "
@@ -451,7 +499,9 @@ def production_contracts() -> List[HloContract]:
             trace_prefill_chunk(dict(int8=True)),
             expect=dict(single_dev, int8_clean=True,
                         gemm_out_cols=packed, d_model=cfg.d_model,
-                        expect_weight_concats=0)),
+                        expect_weight_concats=0),
+            extra_checks=(no_big_upcast(
+                trace_prefill_chunk(dict(int8=True), unopt=True)),)),
     ]
 
     # -- collective-matmul schedule cells (8 fake devices, mesh 2x4) -------

@@ -5,10 +5,15 @@ ONE parse producing instructions (with operand edges and def-use users),
 computations (with parameter tables and roots), module-level
 input/output aliasing (buffer donation), and while-loop trip counts.
 
-Parsing is text-based on ``compiled.as_text()`` output and deliberately
-forgiving: an unrecognized line is skipped, never fatal — the passes
-running on top are CI gates, and a parser crash on an HLO dialect quirk
-would block every PR.  What IS hardened (PR 7 satellite) is the
+Parsing is text-based on ``compiled.as_text()`` output — and also
+accepts the pre-optimization dialect of ``lowered.as_text('hlo')``,
+whose computation headers carry no signature and whose operand refs
+carry no ``%`` sigil (the big-upcast audit runs there: backend dot
+legalization inserts its own full-array converts post-optimization, so
+only the unoptimized module shows what the PROGRAM asked for).  It is
+deliberately forgiving: an unrecognized line is skipped, never fatal —
+the passes running on top are CI gates, and a parser crash on an HLO
+dialect quirk would block every PR.  What IS hardened (PR 7 satellite) is the
 trip-count extraction: multi-digit and scientific-notation constants and
 tuple-shaped constants all parse (the old ``_trip_count`` silently
 returned 1 on a tuple-shaped condition constant, under-counting every
@@ -34,10 +39,17 @@ INT_DTYPES = {"s8", "u8", "s16", "u16", "s32", "u32", "s64", "u64"}
 # a single array shape, optionally with a layout suffix: f32[4,16]{1,0}
 _ONE_SHAPE = re.compile(r"(\w+?)\[([\d,]*)\]")
 _COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->.*\{\s*$")
+# pre-optimization dialect (``lowered.as_text(dialect='hlo')``): the
+# computation header is just ``name.id {`` with no signature
+_COMP_HDR_BARE = re.compile(r"^(?:ENTRY\s+)?([\w.\-]+)\s*\{\s*$")
 _INSTR = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}:T()]+?)\s+"
     r"([\w\-]+)\((.*)$")
 _OPERAND = re.compile(r"%([\w.\-]+)")
+# operand refs in the pre-optimization dialect carry no ``%`` sigil:
+# bare ``name.123`` identifiers, comma-separated (a leading letter
+# keeps numeric literals of constant(...) out)
+_OPERAND_BARE = re.compile(r"(?:^|[,(]\s*)([A-Za-z_][\w\-]*(?:\.\d+)?)")
 _CALL_KEYS = ("calls", "to_apply", "body", "condition",
               "true_computation", "false_computation")
 _BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -301,12 +313,15 @@ def parse_hlo(text: str) -> HloModule:
                     alias[key] = (int(param), pidx)
             continue
         if cur_name is None:
+            m = None
             if "{" in line and "->" in line:
                 m = _COMP_HDR.match(stripped)
-                if m:
-                    cur_name = m.group(1)
-                    cur_instrs = []
-                    cur_is_entry = stripped.startswith("ENTRY")
+            elif stripped.endswith("{"):
+                m = _COMP_HDR_BARE.match(stripped)
+            if m:
+                cur_name = m.group(1)
+                cur_instrs = []
+                cur_is_entry = stripped.startswith("ENTRY")
             continue
         if stripped == "}":
             comps[cur_name] = Computation(cur_name, cur_instrs,
@@ -321,6 +336,8 @@ def parse_hlo(text: str) -> HloModule:
         name, shape, op, rest = m.groups()
         args, attrs, _ = _split_operands(rest)
         operands = tuple(_OPERAND.findall(args))
+        if not operands and op not in ("parameter", "constant"):
+            operands = tuple(_OPERAND_BARE.findall(args))
         cur_instrs.append(Instruction(
             name=name, shape=shape, op=op, args_str=args, attrs_str=attrs,
             operands=operands, is_root=stripped.startswith("ROOT")))

@@ -26,6 +26,10 @@ declares):
                         (else info findings + a metric)
   forbid_f64            any f64-typed instruction or float upcast to f64
                         is an error (fp32-path contracts)
+  forbid_big_upcast_elems  float widening converts whose operand holds
+                        >= this many elements are errors (the decode
+                        contract that no whole KV cache/page pool is
+                        materialized at fp32 per step)
   donated_params        parameter numbers that MUST be aliased into the
                         output (donate_argnums buffers) -> error if not
   gemm_out_cols         result-column width identifying the audited GEMM
@@ -226,7 +230,14 @@ def dtype_flow_pass(module: HloModule, expect: Dict[str, Any]
       traces) — error under ``forbid_f64``;
     * silent upcasts: a float -> wider-float ``convert`` landing at f64
       (error under ``forbid_f64``; bf16 -> f32 promotion is the normal
-      epilogue accumulate and stays a metric).
+      epilogue accumulate and stays a metric);
+    * FULL-POOL upcasts: under ``forbid_big_upcast_elems: N`` any float
+      widening ``convert`` whose operand holds >= N elements is an error
+      — the decode-path contract that the whole KV cache/page pool is
+      never materialized at fp32 per step (the flash paths convert only
+      per-tile operands inside the dot fusions; set N to the pool's
+      logical element count).  ``max_widening_convert_elems`` tracks the
+      largest widening convert on every contract for baseline diffing.
     """
     findings: List[Finding] = []
     bounces = sorted(_taint_dequants(module))
@@ -240,6 +251,9 @@ def dtype_flow_pass(module: HloModule, expect: Dict[str, Any]
 
     f64_count = 0
     widening_converts = 0
+    max_widening_elems = 0
+    big_upcast_limit = expect.get("forbid_big_upcast_elems")
+    big_upcasts = 0
     for cname, ins in module.instructions():
         if ins.op == "parameter":
             continue
@@ -258,6 +272,19 @@ def dtype_flow_pass(module: HloModule, expect: Dict[str, Any]
             if src_dt in FLOAT_DTYPES and \
                     DTYPE_BYTES[ins.dtype] > DTYPE_BYTES[src_dt]:
                 widening_converts += 1
+                _, elems = shape_info(normalize_shape(src.lstrip("%")))
+                max_widening_elems = max(max_widening_elems, elems)
+                if big_upcast_limit is not None and \
+                        elems >= big_upcast_limit:
+                    big_upcasts += 1
+                    findings.append(Finding(
+                        "dtype-flow", "full-pool-upcast", "error",
+                        f"{cname}/{ins.name}",
+                        f"{src_dt} -> {ins.dtype} convert over {elems} "
+                        f"elements (>= {big_upcast_limit}): a whole "
+                        f"cache/pool is materialized at the wider dtype "
+                        f"every step — convert per-tile inside the dot "
+                        f"instead"))
                 if ins.dtype == "f64" and expect.get("forbid_f64"):
                     findings.append(Finding(
                         "dtype-flow", "silent-upcast", "error",
@@ -266,7 +293,10 @@ def dtype_flow_pass(module: HloModule, expect: Dict[str, Any]
 
     metrics = {"int8_bounce_count": len(bounces),
                "f64_instruction_count": f64_count,
-               "float_widening_converts": widening_converts}
+               "float_widening_converts": widening_converts,
+               "max_widening_convert_elems": max_widening_elems}
+    if big_upcast_limit is not None:
+        metrics["big_upcast_count"] = big_upcasts
     return findings, metrics
 
 

@@ -232,6 +232,62 @@ def dequantize_rowwise(q, scale, dtype=jnp.float32):
     return ref.dequantize_rowwise_ref(q, scale, dtype)
 
 
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+#
+# The decode wrappers dispatch all three modes ('xla' -> the tiled-XLA
+# mirror with identical tile semantics).  The prefill wrapper covers the
+# Pallas kernel only: the XLA prefill path is the chunked running-softmax
+# scan in models/attention.py (it predates the kernel and stays the CPU
+# production path), so models code calls this wrapper only when
+# ``kernel_mode() != 'xla'``.
+
+def flash_attention(q, k, v, *, kind="global", window=0, prefix_len=0,
+                    softcap=None, q_offset=0, block_q=128, block_k=128,
+                    mode: Optional[str] = None):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    mode = mode or kernel_mode()
+    assert mode in ("pallas", "interpret"), mode
+    return flash_attention_pallas(
+        q, k, v, kind=kind, window=window, prefix_len=prefix_len,
+        softcap=softcap, q_offset=q_offset, block_q=block_q,
+        block_k=block_k, interpret=(mode == "interpret"))
+
+
+def flash_decode(q, k_cache, v_cache, pos, *, kind="global", softcap=None,
+                 kv_tile: Optional[int] = None, n_splits: int = 1,
+                 mode: Optional[str] = None):
+    from repro.kernels import flash_attention as fa
+    mode = mode or kernel_mode()
+    kv_tile = kv_tile or fa.DEFAULT_KV_TILE
+    if mode == "xla":
+        return fa.flash_decode_xla(q, k_cache, v_cache, pos, kind=kind,
+                                   softcap=softcap, kv_tile=kv_tile)
+    return fa.flash_decode_pallas(
+        q, k_cache, v_cache, pos, kind=kind, softcap=softcap,
+        kv_tile=kv_tile, n_splits=n_splits,
+        interpret=(mode == "interpret"))
+
+
+def paged_flash_decode(q, k_pool, v_pool, page_table, positions, *,
+                       kind="global", window=0, softcap=None,
+                       kv_tile: Optional[int] = None,
+                       mode: Optional[str] = None):
+    from repro.kernels import flash_attention as fa
+    mode = mode or kernel_mode()
+    kv_tile = kv_tile or fa.DEFAULT_KV_TILE
+    if mode == "xla" or q.shape[1] != 1:
+        # the Pallas paged kernel is decode-only; prefill chunks (S > 1)
+        # always take the tiled-XLA mirror
+        return fa.paged_flash_decode_xla(
+            q, k_pool, v_pool, page_table, positions, kind=kind,
+            window=window, softcap=softcap, kv_tile=kv_tile)
+    return fa.paged_flash_decode_pallas(
+        q, k_pool, v_pool, page_table, positions.reshape(-1), kind=kind,
+        window=window, softcap=softcap, interpret=(mode == "interpret"))
+
+
 def _round_pow2_up(v: int) -> int:
     p = 1
     while p < v:

@@ -110,3 +110,135 @@ def quantized_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
     from repro.kernels.epilogue import Epilogue
     return int8_matmul_ref(qa, sa, qb, sb,
                            Epilogue(out_dtype=out_dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash-attention oracles
+# ---------------------------------------------------------------------------
+#
+# Ground truth for the flash kernels is the PLAIN (untiled) masked softmax
+# at ``accum_dtype`` width: with f64 inputs the whole softmax runs at f64,
+# which is what anchors the consistency-budget comparisons.  The tiled
+# kernels and their tiled XLA mirrors must land within rounding distance
+# of these, never bitwise — the bitwise contracts (split-count invariance,
+# dense == paged) are between tiled paths sharing one combine.
+
+_NEG_REF = -1e30
+
+
+def attention_mask_ref(qpos: jnp.ndarray, kpos: jnp.ndarray, *,
+                       kind: str = "global", window: int = 0,
+                       prefix_len: int = 0) -> jnp.ndarray:
+    """[Q, K] bool mask shared by every attention oracle — the same
+    semantics as ``models.attention._block_attend``: causal for
+    global/local/chunked/prefix, sliding window for 'local', block-local
+    for 'chunked', bidirectional prefix override for 'prefix', everything
+    valid for 'full'; ``kpos < 0`` always masks (padding sentinel)."""
+    mask = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if kind in ("global", "local", "chunked", "prefix"):
+        mask &= qpos[:, None] >= kpos[None, :]
+    if kind == "local":
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    if kind == "chunked":
+        mask &= (qpos[:, None] // window) == (kpos[None, :] // window)
+    if kind == "prefix":
+        mask |= kpos[None, :] < prefix_len
+    mask &= kpos[None, :] >= 0
+    return mask
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        kind: str = "global", window: int = 0,
+                        prefix_len: int = 0, softcap=None,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """Prefill/train attention oracle, head-expanded [B, S, H, hd] (k/v
+    may carry KV < H heads; GQA head h reads kv head h // (H // KV)).
+    Plain softmax — the S x S scores ARE materialized here; that is the
+    point of an oracle."""
+    b, sq, n_h, hd = q.shape
+    skv, n_kv = k.shape[1], k.shape[2]
+    acc = accum_dtype(q.dtype)
+    if n_kv != n_h:
+        g = n_h // n_kv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bKhd->bhqK", q.astype(acc), k.astype(acc))
+    s = s * jnp.asarray(hd, acc) ** -0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    mask = attention_mask_ref(qpos, kpos, kind=kind, window=window,
+                              prefix_len=prefix_len)
+    s = jnp.where(mask[None, None], s, _NEG_REF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask[None, None], jnp.exp(s - m), 0.0).astype(acc)
+    out = jnp.einsum("bhqK,bKhd->bhqd", p, v.astype(acc))
+    out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
+    return jnp.einsum("bhqd->bqhd", out).astype(q.dtype)
+
+
+def flash_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos, *, kind: str = "global",
+                     softcap=None) -> jnp.ndarray:
+    """Decode oracle: q [B, 1, KV, G, hd] against dense caches
+    [B, K, KV, hd]; ``pos`` is the current position ('global' attends
+    slots <= pos; 'full' attends every slot — cross-attention).  Plain
+    masked softmax at ``accum_dtype``."""
+    hd = q.shape[-1]
+    acc = accum_dtype(q.dtype)
+    s = jnp.einsum("bqkgd,bKkd->bkgqK", q.astype(acc),
+                   k_cache.astype(acc))
+    s = s * jnp.asarray(hd, acc) ** -0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    slots = jnp.arange(k_cache.shape[1])
+    valid = slots >= 0 if kind == "full" else slots <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, _NEG_REF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(valid[None, None, None, None, :], jnp.exp(s - m),
+                  0.0).astype(acc)
+    out = jnp.einsum("bkgqK,bKkd->bkgqd", p, v_cache.astype(acc))
+    out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
+    return jnp.einsum("bkgqd->bqkgd", out).astype(q.dtype)
+
+
+def paged_flash_decode_ref(q: jnp.ndarray, k_pool: jnp.ndarray,
+                           v_pool: jnp.ndarray, page_table: jnp.ndarray,
+                           positions: jnp.ndarray, *,
+                           kind: str = "global", window: int = 0,
+                           softcap=None) -> jnp.ndarray:
+    """Paged decode/prefill-chunk oracle: q [B, S, KV, G, hd] against the
+    page pools [NP, PS, KV, hd] through ``page_table`` [B, P] (-1 =
+    unmapped -> trash page NP-1, masked to contribute exact zeros);
+    ``positions`` [B, S] global query positions, -1 = inactive."""
+    n_pool, ps = k_pool.shape[0], k_pool.shape[1]
+    b, p_max = page_table.shape
+    hd = q.shape[-1]
+    acc = accum_dtype(q.dtype)
+    mapped = page_table >= 0
+    ptc = jnp.where(mapped, page_table, n_pool - 1)
+    kl = k_pool[ptc].reshape(b, p_max * ps, *k_pool.shape[2:])
+    vl = v_pool[ptc].reshape(b, p_max * ps, *v_pool.shape[2:])
+    s = jnp.einsum("bqkgd,bKkd->bkgqK", q.astype(acc), kl.astype(acc))
+    s = s * jnp.asarray(hd, acc) ** -0.5
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    kvpos = jnp.arange(p_max * ps)
+    kvalid = jnp.repeat(mapped, ps, axis=1)
+    qpos = positions
+    mask = (kvalid[:, None, :]
+            & (kvpos[None, None, :] <= qpos[:, :, None])
+            & (qpos[:, :, None] >= 0))
+    if kind == "local":
+        mask &= (qpos[:, :, None] - kvpos[None, None, :]) < window
+    elif kind == "chunked":
+        mask &= ((qpos[:, :, None] // window)
+                 == (kvpos[None, None, :] // window))
+    m4 = mask[:, None, None]
+    s = jnp.where(m4, s, _NEG_REF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(m4, jnp.exp(s - m), 0.0).astype(acc)
+    out = jnp.einsum("bkgqK,bKkd->bkgqd", p, vl.astype(acc))
+    out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
+    return jnp.einsum("bkgqd->bqkgd", out).astype(q.dtype)

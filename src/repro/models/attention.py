@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import functools
 import math
+import os
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -34,6 +35,28 @@ from repro.models.layers import TPCtx, rope
 from repro.models.param import ParamDef, split_packed_columns
 
 _NEG = -1e30
+
+# Flash-kernel dispatch switch (PR 9).  Default ON: decode and paged
+# decode take the tiled flash paths in ``kernels/flash_attention.py``
+# (per-tile dots at storage dtype, rank-order split combine — no
+# full-cache fp32 upcast in the traced HLO).  Off (env REPRO_FLASH_ATTN
+# in {0, off, false} or ``set_flash_attention(False)``) restores the
+# einsum paths — kept as the benchmark control and for the ring-buffer
+# decode layouts the flash kernels don't cover.
+_FLASH_ATTN = os.environ.get(
+    "REPRO_FLASH_ATTN", "on").lower() not in ("0", "off", "false")
+
+
+def use_flash_attention() -> bool:
+    return _FLASH_ATTN
+
+
+def set_flash_attention(on: bool) -> None:
+    """Process-global, like ``kernels.ops.set_kernel_mode``.  Callers
+    re-tracing jitted serving steps (the benchmarks do) must build a
+    fresh engine afterwards — the branch is baked in at trace time."""
+    global _FLASH_ATTN
+    _FLASH_ATTN = bool(on)
 
 
 def use_xyz_attn_out(cfg: ArchConfig, model: int) -> bool:
@@ -299,9 +322,13 @@ def flash_attention(q, k, v, *, kind="global", window=0, prefix_len=0,
         # pad kv on the left so every q chunk slices a static-size window:
         # q chunk qi needs global kpos in [qi*Cq - W, qi*Cq + Cq) for both
         # 'local' (sliding) and 'chunked' (block-aligned; mask trims).
+        # The right pad covers the q-padding tail (sq rounded up to a
+        # q_chunk multiple): without it the last chunk's slice start gets
+        # CLAMPED by dynamic_slice and real rows attend through
+        # mislabeled positions.
         pad = window
-        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
-        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (pad, max(0, sq - skv)), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, max(0, sq - skv)), (0, 0), (0, 0)))
 
         def per_q(qi):
             qc = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, 1)
@@ -312,6 +339,7 @@ def flash_attention(q, k, v, *, kind="global", window=0, prefix_len=0,
             vc = jax.lax.dynamic_slice_in_dim(vp, qi * q_chunk,
                                               window + q_chunk, 1)
             kpos = qi * q_chunk - window + jnp.arange(window + q_chunk)
+            kpos = jnp.where(kpos < skv, kpos, -1)  # right-pad mask
             m, l, acc = _block_attend(qc, kc, vc, qpos, kpos, kind=kind,
                                       window=window, prefix_len=prefix_len,
                                       softcap=softcap)
@@ -366,10 +394,34 @@ def flash_attention(q, k, v, *, kind="global", window=0, prefix_len=0,
 def decode_attention(q, k_cache, v_cache, pos, *, kind="global", window=0,
                      softcap=None) -> jnp.ndarray:
     """q [B, 1, kv, g, hd]; caches [B, S, kv, hd] (global) or ring buffers
-    [B, W, kv, hd] (local/chunked).  ``pos`` is the current position."""
+    [B, W, kv, hd] (local/chunked).  ``pos`` is the current position.
+
+    Dispatch: 'global'/'full' take the tiled flash-decode path (per-tile
+    dots at the cache's storage dtype, deterministic rank-order split
+    combine); the ring-buffer kinds keep the einsum path — their slot ->
+    position remap breaks the tiles-anchored-at-0 contract, and the ring
+    buffer is already window-sized, so there is no full-cache upcast to
+    avoid there."""
+    if use_flash_attention() and kind in ("global", "full"):
+        from repro.kernels import ops as kops
+        return kops.flash_decode(q, k_cache, v_cache, pos, kind=kind,
+                                 softcap=softcap)
+    return decode_attention_einsum(q, k_cache, v_cache, pos, kind=kind,
+                                   window=window, softcap=softcap)
+
+
+def decode_attention_einsum(q, k_cache, v_cache, pos, *, kind="global",
+                            window=0, softcap=None) -> jnp.ndarray:
+    """The pre-flash einsum decode.  Scores run as a single dot at the
+    cache's storage dtype with fp32 accumulation
+    (``preferred_element_type``) and the probabilities are cast DOWN to
+    the storage dtype for the value dot — the old path upcast the whole
+    K and V caches to fp32 every step, a full-pool HBM round-trip per
+    token (the PR 9 satellite bug)."""
     hd = q.shape[-1]
-    qf = q.astype(jnp.float32) * (hd ** -0.5)
-    s = jnp.einsum("bqkgd,bKkd->bkgqK", qf, k_cache.astype(jnp.float32))
+    s = jnp.einsum("bqkgd,bKkd->bkgqK", q.astype(k_cache.dtype), k_cache,
+                   preferred_element_type=jnp.float32)
+    s = s * jnp.float32(hd) ** -0.5
     if softcap:
         s = softcap * jnp.tanh(s / softcap)
 
@@ -391,7 +443,8 @@ def decode_attention(q, k_cache, v_cache, pos, *, kind="global", window=0,
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)
     p = jnp.where(valid[None, None, None, None, :], p, 0.0)
-    out = jnp.einsum("bkgqK,bKkd->bkgqd", p, v_cache.astype(jnp.float32))
+    out = jnp.einsum("bkgqK,bKkd->bkgqd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
     out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
     return jnp.einsum("bkgqd->bqkgd", out).astype(q.dtype)
 
@@ -447,6 +500,27 @@ def paged_attention(q, k_pool, v_pool, page_table, positions, *,
                     kind="global", window=0, softcap=None) -> jnp.ndarray:
     """q [B, S, kv, g, hd] against the paged pools -> [B, S, kv, g, hd].
 
+    Dispatch: the flash path tiles the lane's logical view with the SAME
+    ``kv_tile`` anchoring as dense flash decode (bitwise-consistent with
+    the fixed-loop shim) and masks unmapped/trash pages to exact zeros,
+    preserving the lane-isolation invariant; the einsum path below is
+    the benchmark control.  Both serve the L-lane decode step (S == 1)
+    and chunked-prefill chunks (S > 1) with the same math.
+    """
+    if use_flash_attention():
+        from repro.kernels import ops as kops
+        return kops.paged_flash_decode(q, k_pool, v_pool, page_table,
+                                       positions, kind=kind, window=window,
+                                       softcap=softcap)
+    return paged_attention_einsum(q, k_pool, v_pool, page_table, positions,
+                                  kind=kind, window=window, softcap=softcap)
+
+
+def paged_attention_einsum(q, k_pool, v_pool, page_table, positions, *,
+                           kind="global", window=0, softcap=None
+                           ) -> jnp.ndarray:
+    """The pre-flash einsum paged path.
+
     Gathers each lane's mapped pages into a logical [B, P*PS, kv, hd]
     view (logical index == global position) and runs the decode mask /
     softmax generalized to S >= 1: a decode step is just a chunk of size
@@ -456,16 +530,20 @@ def paged_attention(q, k_pool, v_pool, page_table, positions, *,
     zeros — a lane's output is bitwise independent of its neighbors.
     Window kinds mask by position (paged lanes keep full history; there
     is no ring buffer, so the summation order never depends on wrap).
+    The gather moves pages at their storage dtype and the dots accumulate
+    at fp32 via ``preferred_element_type`` — the old full-view
+    ``astype(jnp.float32)`` upcasts were the PR 9 satellite bug.
     """
     n_pool, ps = k_pool.shape[0], k_pool.shape[1]
     b, p_max = page_table.shape
     hd = q.shape[-1]
-    qf = q.astype(jnp.float32) * (hd ** -0.5)
     mapped = page_table >= 0
     ptc = jnp.where(mapped, page_table, n_pool - 1)
     kl = k_pool[ptc].reshape(b, p_max * ps, *k_pool.shape[2:])
     vl = v_pool[ptc].reshape(b, p_max * ps, *v_pool.shape[2:])
-    s_mat = jnp.einsum("bqkgd,bKkd->bkgqK", qf, kl.astype(jnp.float32))
+    s_mat = jnp.einsum("bqkgd,bKkd->bkgqK", q.astype(kl.dtype), kl,
+                       preferred_element_type=jnp.float32)
+    s_mat = s_mat * jnp.float32(hd) ** -0.5
     if softcap:
         s_mat = softcap * jnp.tanh(s_mat / softcap)
 
@@ -485,7 +563,8 @@ def paged_attention(q, k_pool, v_pool, page_table, positions, *,
     m = jnp.max(s_mat, axis=-1, keepdims=True)
     p = jnp.exp(s_mat - m)
     p = jnp.where(m4, p, 0.0)
-    out = jnp.einsum("bkgqK,bKkd->bkgqd", p, vl.astype(jnp.float32))
+    out = jnp.einsum("bkgqK,bKkd->bkgqd", p.astype(vl.dtype), vl,
+                     preferred_element_type=jnp.float32)
     out = out / jnp.maximum(jnp.sum(p, axis=-1)[..., None], 1e-30)
     return jnp.einsum("bkgqd->bqkgd", out).astype(q.dtype)
 
@@ -556,15 +635,27 @@ def attention_apply(
         if return_kv:
             assert kv_override is None
             new_cache = {"k": k, "v": v}
-        # head-expand GQA K/V once, OUTSIDE the flash loops, so the blocks
-        # are fully head-parallel (paper Z-sharding, zero inner collectives)
-        ke = jnp.repeat(k, g, axis=2) if g > 1 else k
-        ve = jnp.repeat(v, g, axis=2) if g > 1 else v
-        q, ke, ve = _constrain_qkv(q, ke, ve, cfg, ctx)
-        out = flash_attention(q, ke, ve, kind=kind, window=cfg.window,
-                              prefix_len=prefix_len,
-                              softcap=cfg.attn_softcap,
-                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+        from repro.kernels import ops as kops
+        if (use_flash_attention() and kops.kernel_mode() != "xla"
+                and ctx.model == 1):
+            # fused prefill kernel: GQA-aware index maps consume the
+            # grouped K/V views straight off the packed wqkv projection —
+            # no jnp.repeat head expansion materialized
+            out = kops.flash_attention(q, k, v, kind=kind,
+                                       window=cfg.window,
+                                       prefix_len=prefix_len,
+                                       softcap=cfg.attn_softcap)
+        else:
+            # head-expand GQA K/V once, OUTSIDE the flash loops, so the
+            # blocks are fully head-parallel (paper Z-sharding, zero
+            # inner collectives)
+            ke = jnp.repeat(k, g, axis=2) if g > 1 else k
+            ve = jnp.repeat(v, g, axis=2) if g > 1 else v
+            q, ke, ve = _constrain_qkv(q, ke, ve, cfg, ctx)
+            out = flash_attention(q, ke, ve, kind=kind, window=cfg.window,
+                                  prefix_len=prefix_len,
+                                  softcap=cfg.attn_softcap,
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk)
     elif page_table is not None:
         # paged serving: scatter the new K/V through the page table, then
         # attend over the lane's gathered logical history.  The SAME path

@@ -524,7 +524,17 @@ class Model:
         page_table [L, P].  Returns (logits [L, Vp] vocab-sharded, cache).
         The jit shape depends only on (L, pools, P) — never on which
         requests occupy the lanes, so one compiled program serves
-        arbitrary admit/retire churn."""
+        arbitrary admit/retire churn.
+
+        Attention inside this trace is the paged flash-decode kernel
+        (``kernels/flash_attention.py``): the page gather stays at the
+        pools' storage dtype and logical tiles are anchored at position
+        0 with the dense path's ``kv_tile``, so a lane's output is
+        bitwise identical to the same history decoded through a dense
+        cache — and unmapped pages / idle lanes contribute exact +0.0,
+        which is what makes a lane's math independent of its neighbors'
+        page assignments (the PR 8 isolation invariant, preserved by
+        the kernel's tile masking)."""
         cfg, ctx = self.cfg, self.ctx
         h, new_cache, _ = self.forward(
             params, {"tokens": token}, mode="paged", cache=cache,

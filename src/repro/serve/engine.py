@@ -551,6 +551,16 @@ class ServeEngine:
 
         toks = np.asarray(batch["tokens"])
         b_full = toks.shape[0]
+        if toks.ndim != 2 or toks.shape[1] == 0:
+            # zero-length prompts can never be served (the first pick
+            # needs at least one prefilled position): structured shed for
+            # the whole batch, same contract as the scheduler's
+            # fits_ever rejection — never a Request-validation crash
+            return GenerateResult(
+                tokens=np.zeros((b_full, 0), np.int32),
+                status=[STATUS_SHED] * b_full,
+                fault_step=np.full((b_full,), -1, np.int64),
+                n_steps=0, timed_out=False, admitted=0)
         admit = b_full if scfg.max_lanes is None \
             else min(b_full, scfg.max_lanes)
         sp = scfg.sampling_defaults()
@@ -597,6 +607,14 @@ class ServeEngine:
 
         # admission control: shed surplus lanes before any compute
         b_full = batch["tokens"].shape[0]
+        toks0 = np.asarray(batch["tokens"])
+        if toks0.ndim != 2 or toks0.shape[1] == 0:
+            # same zero-length structured shed as the scheduler shim
+            return GenerateResult(
+                tokens=np.zeros((b_full, 0), np.int32),
+                status=[STATUS_SHED] * b_full,
+                fault_step=np.full((b_full,), -1, np.int64),
+                n_steps=0, timed_out=False, admitted=0)
         admit = b_full if scfg.max_lanes is None \
             else min(b_full, scfg.max_lanes)
         if admit < b_full:

@@ -88,18 +88,39 @@ class PagedKVCache:
         self._table_dev = None
 
     def pages_needed(self, total_len: int) -> int:
+        if total_len < 1:
+            # ceil-div would return 0 and alloc(0) raises: a zero-length
+            # request owns no positions, so it can never be mapped —
+            # callers must shed it structurally (see ``fits_ever``)
+            raise ValueError(
+                f"total_len must be >= 1, got {total_len}")
         return -(-total_len // self.page_size)
 
     def fits_ever(self, total_len: int) -> bool:
         """Could this request EVER be admitted (empty pool, any lane)?
-        False means shed it now — queueing would deadlock."""
+        False means shed it now — queueing would deadlock.  Zero-length
+        requests (empty prompt AND zero budget) can never be admitted."""
+        if total_len < 1:
+            return False
         need = self.pages_needed(total_len)
         return need <= min(self.pages_per_lane, self.n_pages)
 
     def admit(self, lane: int, total_len: int) -> bool:
         """Map ``lane`` for a ``total_len``-position request.  False =
-        transient page exhaustion (caller keeps the request queued)."""
+        transient page exhaustion (caller keeps the request queued).
+
+        Requests the pool can NEVER hold (zero-length, or wider than the
+        page table) are the caller's job to shed via ``fits_ever``;
+        reaching admit with one is a bug, and the check runs BEFORE any
+        allocator call so a failed admission never strands pages (the
+        old order allocated first and died writing the table row,
+        leaking the whole allocation)."""
         assert self.lane_pages[lane] is None, f"lane {lane} already mapped"
+        if not self.fits_ever(total_len):
+            raise ValueError(
+                f"admit of unservable request (total_len={total_len}, "
+                f"pages_per_lane={self.pages_per_lane}) — shed it via "
+                f"fits_ever before admitting")
         pages = self.allocator.alloc(self.pages_needed(total_len))
         if pages is None:
             return False

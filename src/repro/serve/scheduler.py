@@ -19,7 +19,11 @@ programs never change shape:
     (their cache writes land on the trash page, their logits rows are
     ignored).  A lane's math is bitwise independent of its neighbors,
     which is what keeps a request's tokens identical whether it runs
-    alone or amid churn.
+    alone or amid churn.  The attention inside the dispatch is the
+    paged flash-decode kernel — per-tile dots at the pools' storage
+    dtype, rank-order split combine — whose masking gives unmapped
+    pages and idle lanes exact-zero contributions, so the isolation
+    invariant holds at the kernel level, not by host bookkeeping.
   * pick       — one fused guarded dispatch picks every fresh lane's
     token with per-request sampling params (greedy mask, temperature,
     fold_in(request seed, step) keys) and the PR 5 health probes; the
@@ -347,7 +351,12 @@ class PagedScheduler:
             req, sp = self.queue[0]
             total = len(req.tokens) + sp.max_new_tokens
             if not self.kv.fits_ever(total):
-                # could NEVER fit a lane: structured shed, not a crash
+                # could NEVER fit a lane: structured shed, not a crash.
+                # Covers over-wide requests AND zero-length ones (empty
+                # prompt + zero budget, total == 0): fits_ever is the
+                # single gate, so ceil-div/alloc(0) never see them —
+                # reaching admit with an unservable total is a bug it
+                # raises on rather than leaking pages over
                 self.queue.popleft()
                 finished.append(RequestOutput(
                     id=req.id, tokens=np.zeros((0,), np.int32),

@@ -403,3 +403,116 @@ def test_fixed_loop_unavailable_models_reject_submit(model, params):
     eng._paged_ok = False
     with pytest.raises(NotImplementedError, match="paged serving"):
         eng.submit(_req(model, "x"))
+
+
+# ---------------------------------------------------------------------------
+# page-pool conservation: failed admissions never leak pages
+# ---------------------------------------------------------------------------
+
+def test_admit_failure_modes_leave_pool_intact(model):
+    """Regression for the admission page leak: ``admit`` used to call
+    the allocator first and die writing the page-table row, stranding
+    the whole allocation.  Every failure mode — unservable width,
+    zero length, transient exhaustion — must leave ``n_free`` exactly
+    where it was."""
+    kv = PagedKVCache(model, n_lanes=3, n_pages=4, page_size=8,
+                      pages_per_lane=2)
+    n0 = kv.allocator.n_free
+    # unservable: wider than a lane's page-table row
+    with pytest.raises(ValueError, match="unservable"):
+        kv.admit(0, total_len=17)
+    assert kv.allocator.n_free == n0
+    # unservable: zero-length request
+    with pytest.raises(ValueError, match="unservable"):
+        kv.admit(0, total_len=0)
+    assert kv.allocator.n_free == n0
+    # transient exhaustion: neighbors drained the pool
+    assert kv.admit(0, total_len=16)
+    assert kv.admit(1, total_len=9)
+    assert kv.allocator.n_free == 0
+    assert not kv.admit(2, total_len=8)
+    assert kv.allocator.n_free == 0
+    kv.release(0)
+    kv.release(1)
+    assert kv.allocator.n_free == n0
+
+
+def test_page_pool_conserved_under_randomized_churn(model):
+    """Randomized admit/release churn — forced exhaustion, over-wide
+    and zero-length admissions included — conserves the page pool: at
+    every point ``n_free`` equals the initial count minus the pages the
+    live lanes hold, and after releasing everything it returns EXACTLY
+    to the initial count.  Any leak anywhere shows up here."""
+    kv = PagedKVCache(model, n_lanes=4, n_pages=6, page_size=8,
+                      pages_per_lane=3)
+    n0 = kv.allocator.n_free
+    rng = np.random.default_rng(1234)
+    held = {}                            # lane -> pages it owns
+    saw_exhaustion = saw_unservable = False
+    for _ in range(400):
+        lane = int(rng.integers(0, 4))
+        if lane in held:
+            kv.release(lane)
+            del held[lane]
+        else:
+            total = int(rng.integers(-3, 32))
+            free_before = kv.allocator.n_free
+            if not kv.fits_ever(total):
+                saw_unservable = True
+                with pytest.raises(ValueError, match="unservable"):
+                    kv.admit(lane, total)
+                assert kv.allocator.n_free == free_before
+            elif kv.admit(lane, total):
+                held[lane] = kv.pages_needed(total)
+            else:
+                saw_exhaustion = True
+                assert kv.allocator.n_free == free_before
+        assert kv.allocator.n_free == n0 - sum(held.values())
+    assert saw_exhaustion and saw_unservable   # the sweep hit both modes
+    for lane in list(held):
+        kv.release(lane)
+    assert kv.allocator.n_free == n0
+
+
+# ---------------------------------------------------------------------------
+# zero-length requests: structured shed, never a crash
+# ---------------------------------------------------------------------------
+
+def test_zero_length_bookkeeping_rejected_structurally(model):
+    kv = PagedKVCache(model, n_lanes=2, n_pages=4, page_size=8,
+                      pages_per_lane=2)
+    with pytest.raises(ValueError, match="total_len"):
+        kv.pages_needed(0)
+    with pytest.raises(ValueError, match="total_len"):
+        kv.pages_needed(-1)
+    assert not kv.fits_ever(0)
+    assert not kv.fits_ever(-1)
+
+
+def test_scheduler_sheds_zero_length_request(model, engine):
+    """A zero-length request that bypasses the typed-API validation
+    (``Request`` itself rejects empty prompts) must come back as a
+    structured STATUS_SHED, not a ceil-div/alloc(0) crash inside
+    ``pages_needed``/``admit``."""
+    import types
+    req = types.SimpleNamespace(
+        id="empty", tokens=np.zeros((0,), np.int32),
+        sampling=types.SimpleNamespace(max_new_tokens=0), seed=0)
+    engine.submit(req)
+    (o,) = engine.drain()
+    assert o.id == "empty" and o.status == STATUS_SHED
+    assert o.fault_step == -1 and o.tokens.size == 0
+    assert o.n_steps == 0 and o.prompt_len == 0
+
+
+def test_shims_shed_zero_length_batch(model, params):
+    """Both serving shims — paged and the retained fixed loop — shed a
+    ``(B, 0)`` token batch structurally instead of crashing at prefill."""
+    eng = ServeEngine(model, params, _scfg(max_new_tokens=NEW))
+    p = {"tokens": jnp.zeros((3, 0), jnp.int32)}
+    for res in (eng.generate_with_status(p),
+                eng.generate_with_status_fixed(p)):
+        assert res.tokens.shape == (3, 0)
+        assert res.status == [STATUS_SHED] * 3
+        assert (res.fault_step == -1).all()
+        assert res.n_steps == 0 and res.admitted == 0
