@@ -129,6 +129,103 @@ def fused_vs_unfused_rows(passes=2):
     return out
 
 
+def v2_epilogue_rows(passes=2):
+    """The v2 algebra's two fusions, fused vs unfused (same interleaved
+    min-of-N + pooled-median policy as ``fused_vs_unfused_rows``):
+
+    * gated_mlp_block/*: the gated MLP's up half — raw gate GEMM + up
+      GEMM with the two-operand ``silu(g) * u`` store-phase epilogue in
+      one jitted dispatch chain, vs both GEMMs plus a separately jitted
+      elementwise gate multiply (the extra output read + product write).
+    * rmsnorm_fused/*: the down projection with residual + next-norm
+      folded into the store phase (two outputs, one dispatch), vs GEMM
+      then a separately jitted residual add + rmsnorm (the residual
+      stream's extra HBM round trip).
+
+    Shapes: the 1024^3 cell plus the memory-bound 4096x512x4096 cell
+    (shallow K, large M*N — the epilogue's byte traffic is a first-order
+    fraction of the row, which is what this row measures).  The
+    compute-bound 2048^3 cell is deliberately excluded: there the
+    epilogue is ~1% of runtime and on this CPU stand-in the cell
+    reproducibly times threading artifacts of the in-jit reduction, not
+    the fusion (fused_le_unfused flips on noise well outside the 2%
+    margin).
+    """
+    from repro.core.perf_model import fused_epilogue_savings
+    from repro.kernels import ops
+    from repro.kernels.epilogue import Epilogue, apply_epilogue
+    from repro.models.layers import rmsnorm
+
+    gate_ep = Epilogue(gate="silu", out_dtype=jnp.bfloat16)
+    norm_ep = Epilogue(residual=True, norm="rmsnorm",
+                       out_dtype=jnp.bfloat16)
+    timed = []
+    for m, k, n in (SHAPES[1], SHAPES[3]):
+        key = jax.random.PRNGKey(m + n + 1)
+        ka, kb, kg, kd, kr, ks = jax.random.split(key, 6)
+        a = jax.random.normal(ka, (m, k), jnp.float32)
+        wu = jax.random.normal(kb, (k, n), jnp.float32)
+        wg = jax.random.normal(kg, (k, n), jnp.float32)
+        wd = jax.random.normal(kd, (n, k), jnp.float32)
+        res = jax.random.normal(kr, (m, k), jnp.float32)
+        nsc = jax.random.normal(ks, (k,), jnp.float32) * 0.1
+
+        fused_gate = jax.jit(lambda a, wg, wu: ops.matmul(
+            a, wu, mode="xla", epilogue=gate_ep,
+            operand2=ops.matmul(a, wg, mode="xla")))
+        gemm = jax.jit(lambda a, w: ops.matmul(a, w, mode="xla"))
+        gate_tail = jax.jit(lambda g, u: apply_epilogue(
+            u, gate_ep, operand2=g))
+
+        def unfused_gate(a, wg, wu):
+            return gate_tail(gemm(a, wg), gemm(a, wu))
+
+        fused_norm = jax.jit(lambda h, wd, res, nsc: ops.matmul(
+            h, wd, mode="xla", epilogue=norm_ep, residual=res,
+            norm_scale=nsc))
+        norm_tail = jax.jit(lambda acc, res, nsc: (
+            lambda v: (v, rmsnorm(v, nsc)))(
+                (acc + res).astype(jnp.bfloat16)))
+
+        def unfused_norm(h, wd, res, nsc):
+            return norm_tail(gemm(h, wd), res, nsc)
+
+        u = jax.random.normal(kb, (m, n), jnp.float32)
+        timed.append((m, k, n,
+                      (fused_gate, unfused_gate, (a, wg, wu)),
+                      (fused_norm, unfused_norm, (u, wd, res, nsc))))
+
+    best, pooled = {}, {}
+    for _ in range(passes):
+        for m, k, n, gate_cell, norm_cell in timed:
+            for tag, (fused, unfused, args) in (("gated_mlp_block",
+                                                 gate_cell),
+                                                ("rmsnorm_fused",
+                                                 norm_cell)):
+                (us_f, s_f), (us_u, s_u) = _time_us_interleaved(
+                    [fused, unfused], args, iters=10)
+                kk = (tag, m, k, n)
+                bf, bu = best.get(kk, (float("inf"), float("inf")))
+                best[kk] = (min(bf, us_f), min(bu, us_u))
+                pf, pu = pooled.setdefault(kk, ([], []))
+                pf.extend(s_f)
+                pu.extend(s_u)
+
+    out = []
+    for (tag, m, k, n), (us_f, us_u) in best.items():
+        md_f, md_u = (sorted(s)[len(s) // 2] for s in pooled[(tag, m, k, n)])
+        ep = gate_ep if tag == "gated_mlp_block" else norm_ep
+        sav = fused_epilogue_savings(m, n if tag == "gated_mlp_block"
+                                     else k, ep)
+        out.append((
+            f"{tag}/{m}x{k}x{n}", us_f,
+            f"unfused_us={us_u:.1f};speedup={us_u / max(us_f, 1e-9):.2f}x;"
+            f"median_us={md_f:.1f};median_unfused_us={md_u:.1f};"
+            f"model_bytes_saved={int(sav['bytes_saved'])};"
+            f"fused_le_unfused={us_f <= us_u * 1.02}"))
+    return out
+
+
 _RING_SUBPROC = r"""
 import time
 import jax, jax.numpy as jnp, numpy as np
@@ -231,7 +328,8 @@ def ring_overlap_rows():
 
 
 def rows():
-    return fused_vs_unfused_rows(passes=3) + ring_overlap_rows()
+    return (fused_vs_unfused_rows(passes=3) + v2_epilogue_rows(passes=3)
+            + ring_overlap_rows())
 
 
 if __name__ == "__main__":

@@ -61,6 +61,9 @@ def collect() -> Tuple[Dict[str, float], List[str]]:
     # one pass of the interleaved fused-vs-unfused sweep (the gate's own
     # cross-run noise control is the normalized-ratio comparison)
     rows += fused_epilogue.fused_vs_unfused_rows(passes=1)
+    # the v2 algebra's fusions (two-operand gate, rmsnorm-folded output)
+    # carry the same fused_le_unfused timing invariant (WARN below)
+    rows += fused_epilogue.v2_epilogue_rows(passes=1)
     # ring_overlap_rows asserts the cross-schedule BITWISE determinism
     # guarantee inside its subprocess (RING_OK) for 'ring', 'bidir_ring'
     # AND the ksharded overlapped-gather path — a hard correctness check

@@ -343,10 +343,27 @@ def production_contracts() -> List[HloContract]:
                 "byte-identical")]
         return []
 
+    # v2 epilogue-fold expectations (fusion_scope_pass): every block's
+    # residual add + NEXT input norm rides the MLP down projection's
+    # fused epilogue, so the only standalone rmsnorms left in a traced
+    # forward are the ENTRY norm (1) plus each traced block body's
+    # pre-MLP ln2 — bodies = the scanned pattern (traced once) + the
+    # unrolled tail.  The gated MLP's silu(g) * u must never appear as a
+    # tagged standalone multiply.  On int8 paths the only standalone
+    # rowwise quantizes are the per-body INPUT quantizes (packed-QKV in,
+    # o-projection in, MLP in = 3): the up GEMM hands the down GEMM its
+    # (q, scale) pair straight from the store phase.
+    n_bodies = (len(cfg.block_pattern) if cfg.n_groups > 0 else 0) \
+        + len(cfg.tail_blocks)
+    fused_mlp = dict(expect_standalone_rmsnorm=1 + n_bodies,
+                     forbid_unfused_gate_mul=True)
+    int8_fused_mlp = dict(fused_mlp,
+                          expect_standalone_quantize=3 * n_bodies)
+
     decode_expect = dict(single_dev, gemm_out_cols=packed,
                          expect_gemm_dispatches=1,
                          d_model=cfg.d_model, expect_weight_concats=0,
-                         donated_params=donated_cache)
+                         donated_params=donated_cache, **fused_mlp)
 
     # -- paged serving (PR 8): scheduler decode + chunked prefill ----------
     lanes, page = b, 16
@@ -408,7 +425,8 @@ def production_contracts() -> List[HloContract]:
                                expect_gemm_dispatches=1,
                                d_model=cfg.d_model,
                                expect_weight_concats=0,
-                               donated_params=paged_donated(int8=False))
+                               donated_params=paged_donated(int8=False),
+                               **fused_mlp)
 
     contracts = [
         HloContract(
@@ -424,7 +442,8 @@ def production_contracts() -> List[HloContract]:
             "serving prefill (fp32 weights), decode headroom reserved",
             trace_prefill(int8=False),
             expect=dict(single_dev, gemm_out_cols=packed,
-                        d_model=cfg.d_model, expect_weight_concats=0)),
+                        d_model=cfg.d_model, expect_weight_concats=0,
+                        **fused_mlp)),
         HloContract(
             "decode_fp32",
             "engine decode step, fp32, guards off, KV cache donated; "
@@ -443,18 +462,19 @@ def production_contracts() -> List[HloContract]:
         HloContract(
             "prefill_int8",
             "serving prefill on one-shot-quantized weights: zero fp32 "
-            "dequant bounces",
+            "dequant bounces, fused (q, scale) GEMM->GEMM handoffs",
             trace_prefill(int8=True),
             expect=dict(single_dev, int8_clean=True,
                         gemm_out_cols=packed, d_model=cfg.d_model,
-                        expect_weight_concats=0)),
+                        expect_weight_concats=0, **int8_fused_mlp)),
         HloContract(
             "decode_int8",
             "engine int8 decode step: zero bounces, single packed-QKV "
             "dispatch, KV cache donated",
             trace_decode(dict(int8=True)),
             expect=dict(decode_expect, int8_clean=True,
-                        donated_params=decode_donated(int8=True)),
+                        donated_params=decode_donated(int8=True),
+                        **int8_fused_mlp),
             extra_checks=(no_big_upcast(trace_decode(
                 dict(int8=True), unopt=True)),)),
         HloContract(
@@ -479,7 +499,8 @@ def production_contracts() -> List[HloContract]:
             "bounces, page pools donated",
             trace_paged_decode(dict(int8=True)),
             expect=dict(paged_decode_expect, int8_clean=True,
-                        donated_params=paged_donated(int8=True)),
+                        donated_params=paged_donated(int8=True),
+                        **int8_fused_mlp),
             extra_checks=(no_big_upcast(trace_paged_decode(
                 dict(int8=True), unopt=True)),)),
         HloContract(
@@ -489,7 +510,8 @@ def production_contracts() -> List[HloContract]:
             "program",
             trace_prefill_chunk({}),
             expect=dict(single_dev, gemm_out_cols=packed,
-                        d_model=cfg.d_model, expect_weight_concats=0),
+                        d_model=cfg.d_model, expect_weight_concats=0,
+                        **fused_mlp),
             extra_checks=(no_big_upcast(
                 trace_prefill_chunk({}, unopt=True)),)),
         HloContract(
@@ -499,7 +521,7 @@ def production_contracts() -> List[HloContract]:
             trace_prefill_chunk(dict(int8=True)),
             expect=dict(single_dev, int8_clean=True,
                         gemm_out_cols=packed, d_model=cfg.d_model,
-                        expect_weight_concats=0),
+                        expect_weight_concats=0, **int8_fused_mlp),
             extra_checks=(no_big_upcast(
                 trace_prefill_chunk(dict(int8=True), unopt=True)),)),
     ]

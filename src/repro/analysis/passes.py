@@ -36,6 +36,12 @@ declares):
   expect_gemm_dispatches  exact dot-site count at gemm_out_cols
   d_model               weight K dimension for the concat detector
   expect_weight_concats   exact apply-time weight-concat count
+  expect_standalone_rmsnorm  exact count of rmsnorm sites NOT riding a
+                        fused GEMM epilogue (named_scope anchored)
+  forbid_unfused_gate_mul  any 'gate_mul_unfused'-tagged multiply in the
+                        module -> error (fused gated-MLP contracts)
+  expect_standalone_quantize  exact count of standalone rowwise
+                        activation quantizes (int8 handoff contracts)
 """
 from __future__ import annotations
 
@@ -430,8 +436,113 @@ def dispatch_count_pass(module: HloModule, expect: Dict[str, Any]
     return findings, metrics
 
 
+# ---------------------------------------------------------------------------
+# pass 5: epilogue fusion-scope auditor
+# ---------------------------------------------------------------------------
+
+_OP_NAME_RE = None
+
+
+def _op_name(ins: Instruction) -> str:
+    """The jax named_scope chain from the instruction's metadata.
+
+    OPTIMIZED modules only: ``lowered.compile().as_text()`` carries
+    ``metadata={op_name="jit(f)/.../scope/op"}``; the pre-optimization
+    dialect drops it (measured, not documented) — contracts that enforce
+    fusion-scope expectations must trace the optimized text."""
+    global _OP_NAME_RE
+    import re
+    if _OP_NAME_RE is None:
+        _OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+    m = _OP_NAME_RE.search(ins.attrs_str)
+    return m.group(1) if m else ""
+
+
+def fusion_scope_pass(module: HloModule, expect: Dict[str, Any]
+                      ) -> Tuple[List[Finding], Dict[str, Any]]:
+    """Count where the v2 epilogue algebra's elementwise work actually
+    landed, via the named_scope chains the model code plants:
+
+    * ``rmsnorm``        — models.layers.rmsnorm (standalone norm)
+    * ``fused_epilogue`` — kernels.epilogue.apply_epilogue (the GEMM
+                           store-phase chain; a norm whose scope carries
+                           BOTH markers is the rmsnorm-FUSED output)
+    * ``quantize_rowwise``  — ops.quantize_rowwise (a standalone
+                           activation quantize between GEMMs)
+    * ``gate_mul_unfused`` — a deliberately-unfused ``silu(g) * u``
+                           multiply (einsum MoE experts; anything else
+                           carrying the tag is a regression)
+
+    Site anchors are ops unique to each computation: ``rsqrt`` for a
+    norm, round-to-nearest for a quantize, ``multiply`` for the gate
+    tag.  Counts are static dispatch sites in the optimized module
+    (fusion computations included), same counting discipline as
+    ``dispatch_count_pass``.
+
+    Expectations:
+      expect_standalone_rmsnorm   exact standalone-norm site count (the
+                                  entry norm + each block's pre-MLP ln2
+                                  on a fully-folded trace) -> error
+      forbid_unfused_gate_mul     any tagged unfused gate multiply is an
+                                  error (fused-MLP production paths)
+      expect_standalone_quantize  exact standalone rowwise-quantize site
+                                  count (ONE per int8 MLP: the shared
+                                  input quantize) -> error
+    """
+    findings: List[Finding] = []
+    standalone_norm: List[str] = []
+    fused_norm: List[str] = []
+    standalone_quant: List[str] = []
+    gate_unfused: List[str] = []
+    for cname, ins in module.instructions():
+        scope = _op_name(ins)
+        if not scope:
+            continue
+        where = f"{cname}/{ins.name}"
+        if ins.op == "rsqrt" and "rmsnorm" in scope:
+            (fused_norm if "fused_epilogue" in scope
+             else standalone_norm).append(where)
+        elif ins.op.startswith("round-nearest") \
+                and "quantize_rowwise" in scope \
+                and "fused_epilogue" not in scope:
+            standalone_quant.append(where)
+        elif ins.op == "multiply" and "gate_mul_unfused" in scope:
+            gate_unfused.append(where)
+
+    want = expect.get("expect_standalone_rmsnorm")
+    if want is not None and len(standalone_norm) != want:
+        findings.append(Finding(
+            "fusion-scope", "standalone-rmsnorm", "error",
+            standalone_norm[0] if standalone_norm else module.entry or "?",
+            f"{len(standalone_norm)} standalone rmsnorm sites, contract "
+            f"requires {want} (every other norm must ride a down-GEMM's "
+            f"fused epilogue)"))
+    want = expect.get("expect_standalone_quantize")
+    if want is not None and len(standalone_quant) != want:
+        findings.append(Finding(
+            "fusion-scope", "standalone-quantize", "error",
+            standalone_quant[0] if standalone_quant
+            else module.entry or "?",
+            f"{len(standalone_quant)} standalone rowwise-quantize sites, "
+            f"contract requires {want} (GEMM->GEMM int8 handoffs must "
+            f"emit (q, scale) from the store phase)"))
+    if expect.get("forbid_unfused_gate_mul") and gate_unfused:
+        findings.append(Finding(
+            "fusion-scope", "unfused-gate-mul", "error", gate_unfused[0],
+            f"{len(gate_unfused)} unfused gate multiplies on a path "
+            f"whose MLPs must run the two-operand gate epilogue"))
+
+    metrics = {
+        "standalone_rmsnorm_sites": len(standalone_norm),
+        "fused_rmsnorm_sites": len(fused_norm),
+        "standalone_quantize_sites": len(standalone_quant),
+        "unfused_gate_mul_sites": len(gate_unfused),
+    }
+    return findings, metrics
+
+
 PASSES = (collective_schedule_pass, dtype_flow_pass, donation_pass,
-          dispatch_count_pass)
+          dispatch_count_pass, fusion_scope_pass)
 
 
 def run_passes(module: HloModule, expect: Dict[str, Any]

@@ -213,9 +213,10 @@ def _slice_k_block(x2: jnp.ndarray, yid, y: int, model: int) -> jnp.ndarray:
 
 def _local_matmul(x2d: jnp.ndarray, w: jnp.ndarray, *,
                   out_dtype=jnp.float32, epilogue: Optional[Epilogue] = None,
-                  bias=None, residual=None):
+                  bias=None, residual=None, operand2=None, norm_scale=None):
     return kops.matmul(x2d, w, out_dtype=out_dtype, epilogue=epilogue,
-                       bias=bias, residual=residual)
+                       bias=bias, residual=residual, operand2=operand2,
+                       norm_scale=norm_scale)
 
 
 def _chunk_gemm(x2: jnp.ndarray, wl: jnp.ndarray, c, chunk: int,
@@ -396,17 +397,26 @@ def _shard_map(body, mesh, in_specs, out_specs):
     return shard_map_compat(body, mesh, in_specs, out_specs)
 
 
-def _check_epilogue_operands(ep: Optional[Epilogue], bias, residual):
+def _check_epilogue_operands(ep: Optional[Epilogue], bias, residual,
+                             operand2=None, norm_scale=None):
     """Fail fast (outside the shard_map trace) on spec/operand mismatch."""
     if ep is None:
-        assert bias is None and residual is None, (
-            "bias/residual operands require an XYZConfig.epilogue")
+        assert bias is None and residual is None and operand2 is None \
+            and norm_scale is None, (
+                "bias/residual/operand2/norm_scale operands require an "
+                "XYZConfig.epilogue")
         return
     if ep.bias:
         assert bias is not None, "epilogue.bias set but no bias operand"
     if ep.residual:
         assert residual is not None, (
             "epilogue.residual set but no residual operand")
+    if ep.gate != "none":
+        assert operand2 is not None, (
+            "epilogue.gate set but no operand2")
+    if ep.norm != "none":
+        assert norm_scale is not None, (
+            "epilogue.norm set but no norm_scale operand")
 
 
 def xyz_matmul(
@@ -418,6 +428,8 @@ def xyz_matmul(
     batch_sharded: bool = True,
     bias: Optional[jnp.ndarray] = None,
     residual: Optional[jnp.ndarray] = None,
+    operand2: Optional[jnp.ndarray] = None,
+    norm_scale: Optional[jnp.ndarray] = None,
 ):
     """out[..., N] = epilogue(x[..., K] @ W), distributed per the XYZ plan.
 
@@ -427,14 +439,25 @@ def xyz_matmul(
     ('replicated' — the broadcast) or K-sharded in natural order
     ('ksharded' — a previous layer's output).
 
-    ``bias`` is replicated ``[N]``; ``residual`` matches the OUTPUT
-    (N-sharded over model).  With ``cfg.epilogue.quantize`` the return is
-    ``(q [..., N] int8, scale [..., model] f32)`` with per-N-shard rowwise
-    scales.
+    ``bias`` is replicated ``[N]``; ``residual`` and ``operand2`` (the
+    gate epilogue's second tensor) match the OUTPUT (N-sharded over
+    model).  With ``cfg.epilogue.quantize`` the return is ``(q [..., N]
+    int8, scale [..., model] f32)`` with per-N-shard rowwise scales.
+
+    ``norm='rmsnorm'`` epilogues need the FULL output row for the mean of
+    squares, which an N-sharded output never holds — they are valid here
+    only on a model==1 mesh; multi-shard callers use
+    ``xyz_matmul_replicated_out`` (full N on every replica after the
+    psum) instead.
     """
     model = model_size(mesh)
     ep = cfg.epilogue
-    _check_epilogue_operands(ep, bias, residual)
+    _check_epilogue_operands(ep, bias, residual, operand2, norm_scale)
+    if ep is not None and ep.norm != "none" and model > 1:
+        raise ValueError(
+            "norm epilogues need the full output row; xyz_matmul shards N "
+            "over the model axis — use xyz_matmul_replicated_out "
+            "(Y == model) or fall back to a standalone norm")
     if model == 1:
         from repro.kernels.quantize import QuantizedWeight
         if isinstance(w_xyz, QuantizedWeight):
@@ -454,10 +477,16 @@ def xyz_matmul(
             ep, out_dtype=ep.out_dtype or cfg.out_dtype or x.dtype)
         res2 = residual.reshape(-1, residual.shape[-1]) \
             if residual is not None else None
-        out = _local_matmul(x2, w, epilogue=ep1, bias=bias, residual=res2)
+        o2 = operand2.reshape(-1, operand2.shape[-1]) \
+            if operand2 is not None else None
+        out = _local_matmul(x2, w, epilogue=ep1, bias=bias, residual=res2,
+                            operand2=o2, norm_scale=norm_scale)
         if ep1.quantize:
             q, s = out
             return (q.reshape(*lead, -1), s.reshape(*lead, -1))
+        if ep1.norm != "none":
+            value, normed = out
+            return (value.reshape(*lead, -1), normed.reshape(*lead, -1))
         return out.reshape(*lead, -1)
 
     y, z = cfg.y, cfg.z(model)
@@ -475,25 +504,38 @@ def xyz_matmul(
     n_total = w_xyz.shape[-1] * z          # global N
     nloc_out = n_total // model            # every device emits N-chunk md
 
-    def _finish(out2, md, res2):
-        """Post-reduction epilogue on the device's [rows, N/model] shard."""
+    def _finish(out2, md, res2, o2):
+        """Post-reduction epilogue on the device's [rows, N/model] shard.
+        Elementwise per output element (gate included — operand2 is
+        sharded exactly like the output), so applying it after ANY of the
+        four reductions preserves the bitwise cross-schedule contract."""
         if ep is None or (ep.is_identity and ep.out_dtype is None):
             return out2.astype(wire_dtype)
         b_loc = jax.lax.dynamic_slice_in_dim(
             bias, md * nloc_out, nloc_out, axis=-1) if ep.bias else None
         return apply_epilogue(out2, dataclasses.replace(
             ep, out_dtype=ep.out_dtype or wire_dtype), bias=b_loc,
-            residual=res2)
+            residual=res2, operand2=o2)
 
     def body(*args):
         xl, wl = args[0], args[1]
-        res_l = args[2] if (ep is not None and ep.residual) else None
+        pos = 2
+        res_l = None
+        if ep is not None and ep.residual:
+            res_l = args[pos]
+            pos += 1
+        op2_l = None
+        if ep is not None and ep.gate != "none":
+            op2_l = args[pos]
+            pos += 1
         wl = wl[0]  # [K/Y, N/Z]
         md = jax.lax.axis_index("model")
         yid = jax.lax.rem(md, y)
         lead = xl.shape[:-1]
         x2 = xl.reshape(-1, xl.shape[-1])
         res2 = res_l.reshape(-1, res_l.shape[-1]) if res_l is not None \
+            else None
+        o2 = op2_l.reshape(-1, op2_l.shape[-1]) if op2_l is not None \
             else None
 
         gather_partial = None
@@ -528,7 +570,7 @@ def xyz_matmul(
                     bias, md * nloc_out, nloc_out, axis=-1) \
                     if ep.bias else None
                 out = _local_matmul(x2, wl, epilogue=ep1, bias=b_loc,
-                                    residual=res2)
+                                    residual=res2, operand2=o2)
         else:
             # the wire format (and its AD transpose buffers) stays 16-bit
             # when out_dtype says so; the rank-order reduction upcasts.
@@ -566,7 +608,7 @@ def xyz_matmul(
             else:  # unreachable: XYZConfig.__post_init__ validates
                 raise ValueError(cfg.schedule)
             if ep is not None:
-                out = _finish(out, md, res2)
+                out = _finish(out, md, res2, o2)
 
         if ep is not None and ep.quantize:
             q, s = out
@@ -581,6 +623,12 @@ def xyz_matmul(
         assert residual is not None
         in_specs.append(P(row_spec, *mid, "model"))
         operands.append(residual)
+    if ep is not None and ep.gate != "none":
+        assert operand2 is not None
+        # the gate operand is an [.., N] tensor matching the OUTPUT
+        # sharding (the gated MLP's g matches the up GEMM's output)
+        in_specs.append(P(row_spec, *mid, "model"))
+        operands.append(operand2)
     if ep is not None and ep.quantize:
         out_specs = (out_spec, P(row_spec, *mid, "model"))
     else:
@@ -597,22 +645,29 @@ def xyz_matmul_replicated_out(
     batch_sharded: bool = True,
     bias: Optional[jnp.ndarray] = None,
     residual: Optional[jnp.ndarray] = None,
+    operand2: Optional[jnp.ndarray] = None,
+    norm_scale: Optional[jnp.ndarray] = None,
 ):
     """Row-parallel variant with fully replicated (over model) output:
     Y = model, Z = 1, one psum/ring-allreduce — the classic Megatron
     down-projection.  Used when the next op needs the full feature
     dimension on every device (residual adds on replicated activations).
 
-    The epilogue (bias [N], residual [.., N] replicated) is applied after
-    the psum on every replica — still inside the shard_map body, so XLA
-    fuses it into the all-reduce consumer."""
+    The epilogue (bias [N], residual / operand2 [.., N] replicated) is
+    applied after the psum on every replica — still inside the shard_map
+    body, so XLA fuses it into the all-reduce consumer.  Because every
+    replica holds the FULL feature row post-psum, this is the multi-shard
+    home of the ``norm='rmsnorm'`` epilogue: the down-projection emits
+    ``(h_new, rmsnorm(h_new))`` and the next block's input norm never
+    re-reads the residual stream."""
     model = model_size(mesh)
     ep = cfg.epilogue
-    _check_epilogue_operands(ep, bias, residual)
+    _check_epilogue_operands(ep, bias, residual, operand2, norm_scale)
     if model == 1:
         return xyz_matmul(x, w_xyz, mesh=mesh, cfg=cfg,
                           batch_sharded=batch_sharded, bias=bias,
-                          residual=residual)
+                          residual=residual, operand2=operand2,
+                          norm_scale=norm_scale)
     assert cfg.y == model, "replicated-out requires Y == model"
     from repro.core.sharding import row_axes
     row_spec = row_axes(mesh, x.shape[0]) if batch_sharded else None
@@ -623,7 +678,19 @@ def xyz_matmul_replicated_out(
 
     def body(*args):
         xl, wl = args[0], args[1]
-        res_l = args[2] if (ep is not None and ep.residual) else None
+        pos = 2
+        res_l = None
+        if ep is not None and ep.residual:
+            res_l = args[pos]
+            pos += 1
+        op2_l = None
+        if ep is not None and ep.gate != "none":
+            op2_l = args[pos]
+            pos += 1
+        ns_l = None
+        if ep is not None and ep.norm != "none":
+            ns_l = args[pos]
+            pos += 1
         wl = wl[0]
         md = jax.lax.axis_index("model")
         lead = xl.shape[:-1]
@@ -636,12 +703,18 @@ def xyz_matmul_replicated_out(
         if ep is not None:
             res2 = res_l.reshape(-1, res_l.shape[-1]) if res_l is not None \
                 else None
+            o2 = op2_l.reshape(-1, op2_l.shape[-1]) if op2_l is not None \
+                else None
             out = apply_epilogue(out, dataclasses.replace(
                 ep, out_dtype=ep.out_dtype or wire_dtype), bias=bias,
-                residual=res2)
+                residual=res2, operand2=o2, norm_scale=ns_l)
             if ep.quantize:
                 q, s = out
                 return (q.reshape(*lead, -1), s.reshape(*lead, -1))
+            if ep.norm != "none":
+                value, normed = out
+                return (value.reshape(*lead, -1),
+                        normed.reshape(*lead, -1))
         return out.reshape(*lead, -1)
 
     in_specs = [x_spec, P("model", None, None)]
@@ -650,7 +723,15 @@ def xyz_matmul_replicated_out(
         assert residual is not None
         in_specs.append(P(row_spec, *mid, None))
         operands.append(residual)
-    if ep is not None and ep.quantize:
+    if ep is not None and ep.gate != "none":
+        assert operand2 is not None
+        in_specs.append(P(row_spec, *mid, None))
+        operands.append(operand2)
+    if ep is not None and ep.norm != "none":
+        assert norm_scale is not None
+        in_specs.append(P(None))
+        operands.append(norm_scale)
+    if ep is not None and (ep.quantize or ep.norm != "none"):
         out_specs = (P(row_spec, *mid, None), P(row_spec, *mid, None))
     else:
         out_specs = P(row_spec, *mid, None)

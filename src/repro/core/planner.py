@@ -205,19 +205,43 @@ def epilogue_hbm_bytes(m: int, n: int, epilogue=None,
              the 2 * 4 * m * n round trip the fusion deletes (the paper's
              §IV-C discipline of never letting partials touch slow
              memory, applied to the epilogue).
+
+    The v2 algebra's stages price per their operand traffic: the gate
+    stage reads a second ``[m, n]`` tensor either way, but unfused it
+    also re-reads the GEMM output and re-writes the product (a whole
+    extra elementwise pass); the rmsnorm stage writes a second ``[m, n]``
+    output (the normed stream) plus the ``[n]`` scale either way, but
+    unfused it re-reads the just-stored value and the standalone add +
+    norm round-trips the residual stream once more — the read + write
+    per block the fold deletes.
     """
     if epilogue is None:
         return 4 * m * n if fused else 3 * 4 * m * n
-    out_b = m * n * epilogue.out_itemsize()
+    item = epilogue.out_itemsize()
+    gate = getattr(epilogue, "gate", "none") != "none"
+    norm = getattr(epilogue, "norm", "none") != "none"
+    out_b = m * n * item
     if epilogue.quantize:
         # scale vector: one f32 per row ('row') or per column ('col')
         out_b += (m if getattr(epilogue, "quantize_axis", "row") == "row"
                   else n) * 4
     operand_b = (n * 4 if epilogue.bias else 0) + (
-        m * n * epilogue.out_itemsize() if epilogue.residual else 0)
+        m * n * item if epilogue.residual else 0) + (
+        m * n * item if gate else 0)
+    if norm:
+        out_b += m * n * item + 4 * n      # normed stream + scale vector
     if fused:
         return out_b + operand_b
-    return 2 * 4 * m * n + out_b + operand_b
+    unfused = 2 * 4 * m * n + out_b + operand_b
+    if gate:
+        # standalone silu(g) * u: re-read the GEMM output, re-write the
+        # product (the g read is already in operand_b)
+        unfused += 2 * m * n * item
+    if norm:
+        # standalone add + rmsnorm: the residual stream's extra read +
+        # write between the down projection and the next block
+        unfused += 2 * m * n * item
+    return unfused
 
 
 def int8_gemm_hbm_bytes(m: int, k: int, n: int, fused: bool = True,

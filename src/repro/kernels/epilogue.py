@@ -12,14 +12,17 @@ the store phase — one HBM write instead of write + read + write.
 ``apply_epilogue`` is the single implementation of the spec's semantics.
 The Pallas kernel calls it on the accumulator *tile*; the XLA reference
 path (``kernels.ref.matmul_fused_ref``) calls it on the full accumulator
-matrix.  Because both run the same jnp ops in fp32, the two paths are
-numerically identical by construction.
+matrix.  Because both run the same jnp ops at the same width, the two
+paths are numerically identical by construction.  A 64-bit accumulator
+(the consistency-budget oracles) keeps the epilogue math at f64 — the
+spec is f64-capable without a separate reference implementation.
 
 Application order (all math in fp32 — or the int32 accumulator is first
 upcast when any step beyond the cast is requested):
 
-    acc -> (* row/col scales) -> (+ bias) -> activation -> (+ residual)
-        -> cast | rowwise/colwise-int8
+    acc -> (* row/col scales) -> (+ bias) -> activation
+        -> (* gate(operand2))  -> (+ residual)
+        -> cast | rowwise/colwise-int8 | rmsnorm two-output
 
 The scale step is the int8 pipeline's dequantization (paper §IV-C1: int8
 inputs accumulate in int32 and the scales are re-applied *on the way
@@ -28,6 +31,29 @@ out*): an int8 x int8 GEMM passes its activation rowwise scale
 so the int32 -> fp32 boundary happens exactly once, inside the store
 phase — the quantized serving path never bounces through an fp32 HBM
 tensor between GEMMs.
+
+Two-operand stages (the epilogue *algebra*, ROADMAP item 5):
+
+``gate``    multiplies the accumulator by a second ``[M, N]`` tensor
+            operand after the activation step: ``x = act_g(operand2) *
+            x`` with ``act_g`` named by the field ('mul' is a raw
+            multiply).  This is the gated MLP's ``silu(g) * u`` running
+            on the up-GEMM's accumulator tile instead of a separate XLA
+            op — and with ``quantize=True`` the gated path emits one
+            fused ``(q, scale)`` for the down GEMM.
+
+``norm``    'rmsnorm' turns the GEMM into a two-output op: the cast
+            value (the residual stream) AND its rmsnorm with a ``[N]``
+            scale operand + ``norm_eps`` — the *next* layer's input
+            norm folded into the down-projection's store phase, saving
+            a full residual-stream read+write per block.  The normed
+            output is computed from the *cast* value (upcast back to
+            the working width), so ``(value, normed)`` is bitwise
+            identical to storing ``value`` and re-reading it through
+            ``models.layers.rmsnorm`` — fusing never changes bits,
+            it only deletes the HBM round trip.  ``norm`` needs the
+            full output row, so it is illegal on N-sharded outputs and
+            incompatible with ``quantize``.
 
 With ``quantize=True`` the epilogue emits ``(q int8, scale f32)`` as the
 kernel's two outputs and ``out_dtype`` is ignored.  ``quantize_axis``
@@ -45,7 +71,14 @@ import jax
 import jax.numpy as jnp
 
 _ACTIVATIONS = ("none", "gelu", "silu", "relu")
+_GATES = ("none", "mul", "gelu", "silu", "relu")
+_NORMS = ("none", "rmsnorm")
 _QUANT_AXES = ("row", "col")
+
+# named_scope marker on every op apply_epilogue emits: the HLO fusion
+# audit (analysis/passes.py::fusion_scope_pass) tells fused-epilogue
+# math from standalone ops by this scope in the op_name metadata
+FUSED_SCOPE = "fused_epilogue"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,39 +87,76 @@ class Epilogue:
 
     bias:       add a ``[N]`` bias row (operand supplied at call time).
     activation: 'none' | 'gelu' | 'silu' | 'relu', applied in fp32.
+    gate:       'none' | 'mul' | 'gelu' | 'silu' | 'relu' — multiply by
+                a second ``[M, N]`` tensor operand (supplied at call
+                time), optionally passed through the named activation
+                first: ``x = gate(operand2) * x``.
     residual:   add a ``[M, N]`` residual (operand supplied at call time).
-    out_dtype:  storage dtype of the single output (None -> accumulator
+    norm:       'none' | 'rmsnorm' — emit ``(value, rmsnorm(value))``
+                as two outputs; the norm scale ``[N]`` is supplied at
+                call time, ``norm_eps`` is static.
+    norm_eps:   rmsnorm epsilon (must be > 0).
+    out_dtype:  storage dtype of the value output (None -> accumulator
                 dtype).  Ignored when ``quantize`` is set.
     quantize:   symmetric int8 quantization; the GEMM emits ``(q, scale)``
-                instead of one output.
+                instead of one output.  Incompatible with ``norm``.
     quantize_axis: 'row' (scale [M, 1], activation layout) or 'col'
                 (scale [1, N], weight/weight-grad layout).
     """
 
     bias: bool = False
     activation: str = "none"
+    gate: str = "none"
     residual: bool = False
+    norm: str = "none"
+    norm_eps: float = 1e-6
     out_dtype: Optional[Any] = None
     quantize: bool = False
     quantize_axis: str = "row"
 
     def __post_init__(self):
-        assert self.activation in _ACTIVATIONS, self.activation
-        assert self.quantize_axis in _QUANT_AXES, self.quantize_axis
+        # ValueError (not assert) so invalid specs fail under python -O
+        # too — same convention as XYZConfig.__post_init__
+        if self.activation not in _ACTIVATIONS:
+            raise ValueError(
+                f"Epilogue.activation must be one of {_ACTIVATIONS}, "
+                f"got {self.activation!r}")
+        if self.gate not in _GATES:
+            raise ValueError(
+                f"Epilogue.gate must be one of {_GATES}, "
+                f"got {self.gate!r}")
+        if self.norm not in _NORMS:
+            raise ValueError(
+                f"Epilogue.norm must be one of {_NORMS}, "
+                f"got {self.norm!r}")
+        if self.quantize_axis not in _QUANT_AXES:
+            raise ValueError(
+                f"Epilogue.quantize_axis must be one of {_QUANT_AXES}, "
+                f"got {self.quantize_axis!r}")
+        if self.quantize and self.norm != "none":
+            raise ValueError(
+                "Epilogue.quantize and Epilogue.norm are mutually "
+                "exclusive: the normed output feeds a full-width GEMM "
+                "input, quantize emits (q, scale)")
+        if not self.norm_eps > 0:
+            raise ValueError(
+                f"Epilogue.norm_eps must be > 0, got {self.norm_eps!r}")
 
     @property
     def is_identity(self) -> bool:
         """True when the epilogue is nothing but the accumulator cast."""
         return not (self.bias or self.residual or self.quantize
-                    or self.activation != "none")
+                    or self.activation != "none"
+                    or self.gate != "none" or self.norm != "none")
 
     @property
     def n_outputs(self) -> int:
-        return 2 if self.quantize else 1
+        return 2 if (self.quantize or self.norm != "none") else 1
 
     def out_itemsize(self, acc_dtype=jnp.float32) -> int:
         """Bytes per output element actually stored to HBM (the quantize
-        scale vector is amortized over the other dim and ignored here)."""
+        scale vector is amortized over the other dim and ignored here;
+        a norm epilogue stores TWO [M, N] outputs of this itemsize)."""
         if self.quantize:
             return 1
         return jnp.dtype(self.out_dtype or acc_dtype).itemsize
@@ -108,7 +178,8 @@ def quantize_symmetric(x: jnp.ndarray, axis: int
     ``axis=-1`` gives per-row scales, ``axis=-2`` per-column scales."""
     absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
     scale = (jnp.maximum(absmax, 1e-12) / 127.0).astype(jnp.float32)
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(x / scale.astype(x.dtype)), -127, 127
+                 ).astype(jnp.int8)
     return q, scale
 
 
@@ -119,39 +190,86 @@ def apply_epilogue(
     residual: Optional[jnp.ndarray] = None,
     row_scale: Optional[jnp.ndarray] = None,
     col_scale: Optional[jnp.ndarray] = None,
+    operand2: Optional[jnp.ndarray] = None,
+    norm_scale: Optional[jnp.ndarray] = None,
+    norm_n: Optional[int] = None,
 ) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
     """Apply ``ep`` to an accumulator (tile or full matrix).
 
-    ``acc`` is the 32-bit GEMM accumulator.  ``row_scale [M, 1]`` /
-    ``col_scale [1, N]`` dequantize an int8 GEMM's int32 accumulator at
-    the fp32 boundary (both broadcast over ``acc``).  ``bias`` broadcasts
-    over rows (shape ``[N]`` or ``[1, N]``); ``residual`` matches ``acc``.
-    Returns the cast output, or ``(q, scale)`` under ``quantize``.
+    ``acc`` is the 32-bit (or, for the oracles, 64-bit) GEMM
+    accumulator.  ``row_scale [M, 1]`` / ``col_scale [1, N]`` dequantize
+    an int8 GEMM's int32 accumulator at the fp32 boundary (both
+    broadcast over ``acc``).  ``bias`` broadcasts over rows (shape
+    ``[N]`` or ``[1, N]``); ``residual`` and ``operand2`` match ``acc``;
+    ``norm_scale`` broadcasts over rows like ``bias``.
+
+    ``norm_n`` is the TRUE output-row length when ``acc`` is a
+    zero-padded kernel tile: padded columns contribute exact +0.0 to the
+    rmsnorm sum of squares, but the mean must divide by the real N, not
+    the padded tile width.  ``None`` means the trailing dim is unpadded.
+
+    Returns the cast output, ``(q, scale)`` under ``quantize``, or
+    ``(value, normed)`` under ``norm='rmsnorm'``.
     """
     scaled = row_scale is not None or col_scale is not None
     if ep.is_identity and not scaled:
         return acc.astype(ep.out_dtype) if ep.out_dtype else acc
 
-    x = acc.astype(jnp.float32)
-    if row_scale is not None:
-        x = x * row_scale.astype(jnp.float32)
-    if col_scale is not None:
-        x = x * col_scale.astype(jnp.float32)
-    if ep.bias:
-        assert bias is not None, "Epilogue.bias set but no bias operand"
-        b = bias.astype(jnp.float32)
-        x = x + (b if b.ndim == x.ndim else b[None, :])
-    x = _activate(x, ep.activation)
-    if ep.residual:
-        assert residual is not None, (
-            "Epilogue.residual set but no residual operand")
-        x = x + residual.astype(jnp.float32)
+    # a 64-bit accumulator keeps the whole epilogue at f64 (the oracle
+    # path); every production accumulator (f32 / int32) runs at f32 —
+    # bitwise-unchanged from the single-width implementation
+    wide = acc.dtype if acc.dtype == jnp.float64 else jnp.float32
 
-    if ep.quantize:
-        return quantize_symmetric(
-            x, axis=-1 if ep.quantize_axis == "row" else -2)
+    with jax.named_scope(FUSED_SCOPE):
+        x = acc.astype(wide)
+        if row_scale is not None:
+            x = x * row_scale.astype(wide)
+        if col_scale is not None:
+            x = x * col_scale.astype(wide)
+        if ep.bias:
+            assert bias is not None, "Epilogue.bias set but no bias operand"
+            b = bias.astype(wide)
+            x = x + (b if b.ndim == x.ndim else b[None, :])
+        x = _activate(x, ep.activation)
+        if ep.gate != "none":
+            assert operand2 is not None, (
+                "Epilogue.gate set but no operand2")
+            g = operand2.astype(wide)
+            if ep.gate != "mul":
+                g = _activate(g, ep.gate)
+            x = g * x
+        if ep.residual:
+            assert residual is not None, (
+                "Epilogue.residual set but no residual operand")
+            x = x + residual.astype(wide)
 
-    # an int8 (scaled) accumulator that was dequantized defaults to fp32
-    # output, never back to the int32 container dtype
-    default = jnp.float32 if scaled else acc.dtype
-    return x.astype(ep.out_dtype or default)
+        if ep.quantize:
+            return quantize_symmetric(
+                x, axis=-1 if ep.quantize_axis == "row" else -2)
+
+        # an int8 (scaled) accumulator that was dequantized defaults to
+        # fp32 output, never back to the int32 container dtype
+        default = jnp.float32 if scaled else acc.dtype
+        value = x.astype(ep.out_dtype or default)
+
+        if ep.norm == "rmsnorm":
+            assert norm_scale is not None, (
+                "Epilogue.norm set but no norm_scale operand")
+            # computed from the CAST value so (value, normed) is bitwise
+            # what store-then-rmsnorm(value) would produce — the fusion
+            # deletes the HBM round trip without changing a single bit.
+            # The nested scope makes the site's op_name carry BOTH
+            # markers ('.../fused_epilogue/rmsnorm/...'), which is how
+            # analysis.passes.fusion_scope_pass tells a fused norm from
+            # a standalone models.layers.rmsnorm.
+            with jax.named_scope("rmsnorm"):
+                n = norm_n if norm_n is not None else x.shape[-1]
+                nf = value.astype(wide)
+                ms = jnp.sum(nf * nf, axis=-1, keepdims=True) / n
+                s = norm_scale.astype(wide)
+                s = s if s.ndim == nf.ndim else s[None, :]
+                normed = (nf * jax.lax.rsqrt(ms + ep.norm_eps)
+                          * (1.0 + s)).astype(value.dtype)
+            return value, normed
+
+        return value

@@ -54,7 +54,9 @@ from repro.kernels.ref import accum_dtype
 
 def _matmul_kernel(*refs, k_steps: int, out_dtype, epilogue: Epilogue,
                    has_a_scale: bool, has_b_scale: bool,
-                   has_bias: bool, has_residual: bool):
+                   has_bias: bool, has_residual: bool,
+                   has_operand2: bool, has_norm_scale: bool,
+                   norm_n: Optional[int]):
     """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis; the
     fp32/int32 accumulator tile lives in VMEM scratch across K steps.  The
     epilogue runs on the accumulator tile at the final K step (the store
@@ -72,6 +74,10 @@ def _matmul_kernel(*refs, k_steps: int, out_dtype, epilogue: Epilogue,
     pos += int(has_bias)
     res_ref = refs[pos] if has_residual else None
     pos += int(has_residual)
+    op2_ref = refs[pos] if has_operand2 else None
+    pos += int(has_operand2)
+    ns_ref = refs[pos] if has_norm_scale else None
+    pos += int(has_norm_scale)
     out_refs = refs[pos:-1]
     acc_ref = refs[-1]
 
@@ -95,11 +101,18 @@ def _matmul_kernel(*refs, k_steps: int, out_dtype, epilogue: Epilogue,
             residual=res_ref[...] if has_residual else None,
             row_scale=as_ref[...] if has_a_scale else None,
             col_scale=bs_ref[...] if has_b_scale else None,
+            operand2=op2_ref[...] if has_operand2 else None,
+            norm_scale=ns_ref[...] if has_norm_scale else None,
+            norm_n=norm_n,
         )
         if epilogue.quantize:
             q, s = out
             out_refs[0][...] = q
             out_refs[1][...] = s
+        elif epilogue.norm != "none":
+            value, normed = out
+            out_refs[0][...] = value.astype(out_dtype)
+            out_refs[1][...] = normed.astype(out_dtype)
         else:
             out_refs[0][...] = out.astype(out_dtype)
 
@@ -130,18 +143,24 @@ def matmul_pallas(
     b_scale: Optional[jnp.ndarray] = None,
     bias: Optional[jnp.ndarray] = None,
     residual: Optional[jnp.ndarray] = None,
+    operand2: Optional[jnp.ndarray] = None,
+    norm_scale: Optional[jnp.ndarray] = None,
 ):
     """C[M, N] = epilogue(A[M, K] @ B[K, N]) via the blocked Pallas kernel.
 
     Inputs are zero-padded to block multiples (the paper's Fig. 8 padding
     model) and the result is sliced back.  With ``epilogue.quantize`` the
     return value is ``(q int8 [M, N], scale f32 [M, 1])`` (``[1, N]``
-    under ``quantize_axis='col'``); otherwise a single ``[M, N]`` array in
-    the epilogue/out dtype.
+    under ``quantize_axis='col'``); with ``epilogue.norm`` it is
+    ``(value, normed)``, both ``[M, N]``; otherwise a single ``[M, N]``
+    array in the epilogue/out dtype.
 
     ``a_scale [M, 1]`` / ``b_scale [1, N]`` are the int8 pipeline's
     quantization scales, re-applied on the int32 accumulator tile in the
     store phase (before bias/activation) — int8 in, one HBM write out.
+    ``operand2 [M, N]`` is the gate epilogue's second tensor operand
+    (tiled like the residual); ``norm_scale [N]`` the rmsnorm scale row
+    (tiled like the bias).
     """
     assert a.ndim == 2 and b.ndim == 2 and a.shape[1] == b.shape[0]
     ep = epilogue or Epilogue()
@@ -158,10 +177,12 @@ def matmul_pallas(
         # (sublane-aligned); zero-pad rows cannot raise a column's absmax.
         bm = _ceil_mult(m, 8)
     ap = _pad_to(a, bm, bk)
-    if ep.quantize and ep.quantize_axis == "row":
-        # rowwise scale needs the whole row in one tile: N is one block
-        # (lane-aligned), exactly like kernels.quantize — zero-pad columns
-        # cannot raise a row's absmax.
+    if (ep.quantize and ep.quantize_axis == "row") or ep.norm != "none":
+        # rowwise scale / rmsnorm needs the whole row in one tile: N is
+        # one block (lane-aligned), exactly like kernels.quantize —
+        # zero-pad columns cannot raise a row's absmax, and they
+        # contribute exact +0.0 to the rmsnorm sum of squares (the mean
+        # divides by the TRUE n via norm_n below).
         bn = _ceil_mult(n, 128)
     bp = _pad_to(b, bk, bn)
     mp, kp = ap.shape
@@ -193,6 +214,18 @@ def matmul_pallas(
             "epilogue.residual requires a [M, N] residual operand")
         in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)))
         operands.append(_pad_to(residual, bm, bn))
+    if ep.gate != "none":
+        assert operand2 is not None and operand2.shape == (m, n), (
+            "epilogue.gate requires a [M, N] operand2")
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)))
+        operands.append(_pad_to(operand2, bm, bn))
+    if ep.norm != "none":
+        assert norm_scale is not None and norm_scale.shape[-1] == n, (
+            "epilogue.norm requires a [N] norm_scale operand")
+        ns2 = norm_scale.reshape(1, n)
+        ns2 = jnp.pad(ns2, ((0, 0), (0, np_ - n))) if np_ != n else ns2
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+        operands.append(ns2)
 
     if ep.quantize:
         out_specs = [pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))]
@@ -203,6 +236,11 @@ def matmul_pallas(
         else:
             out_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
             out_shape.append(jax.ShapeDtypeStruct((1, np_), jnp.float32))
+    elif ep.norm != "none":
+        out_specs = [pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+                     pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))]
+        out_shape = [jax.ShapeDtypeStruct((mp, np_), out_dtype),
+                     jax.ShapeDtypeStruct((mp, np_), out_dtype)]
     else:
         out_specs = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
         out_shape = jax.ShapeDtypeStruct((mp, np_), out_dtype)
@@ -211,6 +249,9 @@ def matmul_pallas(
         _matmul_kernel, k_steps=grid[2], out_dtype=out_dtype, epilogue=ep,
         has_a_scale=a_scale is not None, has_b_scale=b_scale is not None,
         has_bias=ep.bias, has_residual=ep.residual,
+        has_operand2=ep.gate != "none",
+        has_norm_scale=ep.norm != "none",
+        norm_n=n if ep.norm != "none" else None,
     )
     params = {}
     cp_cls = getattr(pltpu, "CompilerParams", None) or getattr(
@@ -228,18 +269,26 @@ def matmul_pallas(
         if ep.quantize:
             # scale vector: a column (rowwise) or a row (colwise)
             out_bytes += (mp if ep.quantize_axis == "row" else np_) * 4
+        if ep.norm != "none":
+            # second [M, N] output: the normed residual-stream view
+            out_bytes += mp * np_ * ep.out_itemsize(acc)
         extra_in = (np_ * 4 if ep.bias else 0) + (
             mp * np_ * jnp.dtype(residual.dtype).itemsize
             if ep.residual else 0)
+        extra_in += (mp * np_ * jnp.dtype(operand2.dtype).itemsize
+                     if ep.gate != "none" else 0)
+        extra_in += np_ * 4 if ep.norm != "none" else 0
         extra_in += (mp * 4 if a_scale is not None else 0) + (
             np_ * 4 if b_scale is not None else 0)
+        transc = mp * np_ if ep.activation in ("gelu", "silu") else 0
+        transc += mp * np_ if ep.gate in ("gelu", "silu") else 0
+        transc += mp if ep.norm != "none" else 0
         cost = pl.CostEstimate(
             flops=2 * mp * kp * np_,
             bytes_accessed=(mp * kp * ap.dtype.itemsize
                             + kp * np_ * bp.dtype.itemsize
                             + out_bytes + extra_in),
-            transcendentals=(mp * np_
-                             if ep.activation in ("gelu", "silu") else 0),
+            transcendentals=transc,
         )
     out = pl.pallas_call(
         kernel,
@@ -256,6 +305,9 @@ def matmul_pallas(
         q, s = out
         return (q[:m, :n], s[:m]) if ep.quantize_axis == "row" \
             else (q[:m, :n], s[:, :n])
+    if ep.norm != "none":
+        value, normed = out
+        return value[:m, :n], normed[:m, :n]
     return out[:m, :n]
 
 

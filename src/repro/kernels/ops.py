@@ -89,6 +89,8 @@ def matmul(
     epilogue: Optional[Epilogue] = None,
     bias: Optional[jnp.ndarray] = None,
     residual: Optional[jnp.ndarray] = None,
+    operand2: Optional[jnp.ndarray] = None,
+    norm_scale: Optional[jnp.ndarray] = None,
 ):
     """Planned, blocked matmul (2D x 2D) with an optional fused epilogue.
     Higher-rank callers flatten the leading dims (activation rows are the
@@ -105,15 +107,17 @@ def matmul(
     ever reaches the HLO."""
     mode = mode or kernel_mode()
     if epilogue is None:
-        assert bias is None and residual is None, (
-            "bias/residual operands require an Epilogue spec "
-            "(e.g. epilogue=Epilogue(bias=True))")
+        assert bias is None and residual is None and operand2 is None \
+            and norm_scale is None, (
+                "bias/residual/operand2/norm_scale operands require an "
+                "Epilogue spec (e.g. epilogue=Epilogue(bias=True))")
     if isinstance(b, QuantizedWeight):
         qa, sa = quantize_rowwise(a, mode=mode)
         qb, sb = b.as_matrix()
         return int8_matmul(qa, sa, qb, sb, out_dtype=out_dtype,
                            block=block, mode=mode, epilogue=epilogue,
-                           bias=bias, residual=residual)
+                           bias=bias, residual=residual,
+                           operand2=operand2, norm_scale=norm_scale)
     if mode == "xla":
         if epilogue is None:
             return ref.matmul_ref(a, b, out_dtype)
@@ -122,14 +126,15 @@ def matmul(
             import dataclasses
             epilogue = dataclasses.replace(epilogue, out_dtype=out_dtype)
         return ref.matmul_fused_ref(a, b, epilogue, bias=bias,
-                                    residual=residual)
+                                    residual=residual, operand2=operand2,
+                                    norm_scale=norm_scale)
     if block is None:
         block = _clamped_default_block(a.shape[0], a.shape[1], b.shape[1],
                                        str(a.dtype))
     return matmul_pallas(
         a, b, block=block, out_dtype=out_dtype,
         interpret=(mode == "interpret"), epilogue=epilogue, bias=bias,
-        residual=residual,
+        residual=residual, operand2=operand2, norm_scale=norm_scale,
     )
 
 
@@ -145,6 +150,8 @@ def int8_matmul(
     epilogue: Optional[Epilogue] = None,
     bias: Optional[jnp.ndarray] = None,
     residual: Optional[jnp.ndarray] = None,
+    operand2: Optional[jnp.ndarray] = None,
+    norm_scale: Optional[jnp.ndarray] = None,
 ):
     """Planned, blocked int8 x int8 -> int32 GEMM with both quantization
     scales folded into the fused epilogue (paper §IV-C1: int8 inputs,
@@ -165,18 +172,22 @@ def int8_matmul(
         "a bias operand requires Epilogue(bias=True)")
     assert ep.residual or residual is None, (
         "a residual operand requires Epilogue(residual=True)")
+    assert ep.gate != "none" or operand2 is None, (
+        "an operand2 requires Epilogue(gate=...)")
     if out_dtype is not None and ep.out_dtype is None:
         import dataclasses
         ep = dataclasses.replace(ep, out_dtype=out_dtype)
     if mode == "xla":
         return ref.int8_matmul_ref(qa, sa, qb, sb, ep, bias=bias,
-                                   residual=residual)
+                                   residual=residual, operand2=operand2,
+                                   norm_scale=norm_scale)
     if block is None:
         block = _clamped_default_block(qa.shape[0], qa.shape[1],
                                        qb.shape[1], "int8")
     return matmul_pallas(
         qa, qb, block=block, interpret=(mode == "interpret"), epilogue=ep,
         a_scale=sa, b_scale=sb, bias=bias, residual=residual,
+        operand2=operand2, norm_scale=norm_scale,
     )
 
 
@@ -203,13 +214,18 @@ def addertree(
 def quantize_rowwise(
     x: jnp.ndarray, *, block_rows: int = 256, mode: Optional[str] = None
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    # the named_scope marks this as a STANDALONE quantize dispatch in the
+    # traced HLO's op_name metadata — the fusion audit
+    # (analysis/passes.py::fusion_scope_pass) counts these to prove the
+    # fused (q, scale) handoffs really replaced separate quantize ops
     mode = mode or kernel_mode()
-    if mode == "xla":
-        return ref.quantize_rowwise_ref(x)
-    return quantize_rowwise_pallas(
-        x, block_rows=min(block_rows, _round_pow2_up(x.shape[0])),
-        interpret=(mode == "interpret"),
-    )
+    with jax.named_scope("quantize_rowwise"):
+        if mode == "xla":
+            return ref.quantize_rowwise_ref(x)
+        return quantize_rowwise_pallas(
+            x, block_rows=min(block_rows, _round_pow2_up(x.shape[0])),
+            interpret=(mode == "interpret"),
+        )
 
 
 def quantize_colwise(

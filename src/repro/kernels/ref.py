@@ -42,15 +42,21 @@ def matmul_ref(a: jnp.ndarray, b: jnp.ndarray,
 
 def matmul_fused_ref(a: jnp.ndarray, b: jnp.ndarray, epilogue,
                      bias: Optional[jnp.ndarray] = None,
-                     residual: Optional[jnp.ndarray] = None):
+                     residual: Optional[jnp.ndarray] = None,
+                     operand2: Optional[jnp.ndarray] = None,
+                     norm_scale: Optional[jnp.ndarray] = None):
     """epilogue(A @ B): the XLA mirror of the fused-epilogue Pallas kernel.
 
     Shares ``kernels.epilogue.apply_epilogue`` with the kernel's store
-    phase, so both paths are numerically identical by construction.
-    Returns ``(q, scale)`` under ``epilogue.quantize``, else one array."""
+    phase, so both paths are numerically identical by construction — and
+    f64 inputs keep the whole chain (dot AND epilogue) at f64, making
+    this the oracle for the two-operand stages too.  Returns ``(q,
+    scale)`` under ``epilogue.quantize``, ``(value, normed)`` under
+    ``epilogue.norm``, else one array."""
     from repro.kernels.epilogue import apply_epilogue
     acc = jnp.dot(a, b, preferred_element_type=accum_dtype(a.dtype))
-    return apply_epilogue(acc, epilogue, bias=bias, residual=residual)
+    return apply_epilogue(acc, epilogue, bias=bias, residual=residual,
+                          operand2=operand2, norm_scale=norm_scale)
 
 
 def addertree_ref(partials: jnp.ndarray,
@@ -86,7 +92,9 @@ def dequantize_rowwise_ref(q: jnp.ndarray, scale: jnp.ndarray,
 def int8_matmul_ref(qa: jnp.ndarray, sa: jnp.ndarray, qb: jnp.ndarray,
                     sb: jnp.ndarray, epilogue=None,
                     bias: Optional[jnp.ndarray] = None,
-                    residual: Optional[jnp.ndarray] = None):
+                    residual: Optional[jnp.ndarray] = None,
+                    operand2: Optional[jnp.ndarray] = None,
+                    norm_scale: Optional[jnp.ndarray] = None):
     """epilogue(sa * sb * (QA @ QB)): the serving int8 GEMM's XLA mirror.
 
     ``qa [M, K]`` int8 with rowwise scales ``sa [M, 1]``; ``qb [K, N]``
@@ -98,7 +106,8 @@ def int8_matmul_ref(qa: jnp.ndarray, sa: jnp.ndarray, qb: jnp.ndarray,
     from repro.kernels.epilogue import Epilogue, apply_epilogue
     acc = jnp.dot(qa, qb, preferred_element_type=jnp.int32)
     return apply_epilogue(acc, epilogue or Epilogue(), bias=bias,
-                          residual=residual, row_scale=sa, col_scale=sb)
+                          residual=residual, row_scale=sa, col_scale=sb,
+                          operand2=operand2, norm_scale=norm_scale)
 
 
 def quantized_matmul_ref(a: jnp.ndarray, b: jnp.ndarray,

@@ -52,10 +52,18 @@ class TPCtx:
 # ---------------------------------------------------------------------------
 
 def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
-    xf = x.astype(jnp.float32)
-    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
-    return out.astype(x.dtype)
+    # named_scope marks this as a STANDALONE norm in the traced HLO's
+    # op_name metadata; the fusion audit counts these against the
+    # rmsnorm-fused GEMM outputs (which carry the fused_epilogue scope)
+    with jax.named_scope("rmsnorm"):
+        xf = x.astype(jnp.float32)
+        # sum / n, NOT jnp.mean: must be the exact expression the fused
+        # epilogue's norm stage emits (kernels.epilogue.apply_epilogue),
+        # so a folded (value, normed) GEMM output is bitwise identical
+        # to storing value and re-reading it through this function
+        var = jnp.sum(xf * xf, axis=-1, keepdims=True) / xf.shape[-1]
+        out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+        return out.astype(x.dtype)
 
 
 def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
@@ -134,17 +142,33 @@ def scatter_seq(x: jnp.ndarray, ctx: TPCtx) -> jnp.ndarray:
 
 
 def xyz_matmul_seq_scatter(x: jnp.ndarray, w_xyz: jnp.ndarray, *,
-                           ctx: TPCtx, x_layout: str = "ksharded") -> jnp.ndarray:
+                           ctx: TPCtx, x_layout: str = "ksharded",
+                           residual: Optional[jnp.ndarray] = None,
+                           norm_scale: Optional[jnp.ndarray] = None,
+                           norm_eps: float = 1e-6):
     """Row-parallel (Y = model) GEMM whose reduction scatters over the
     SEQUENCE dim: out [B, S, N] -> [B, S/model, N].  The Megatron-SP
-    down-projection; adder tree + scatter in one collective."""
+    down-projection; adder tree + scatter in one collective.
+
+    With ``residual`` (the seq-sharded stream [B, S/model, N]) and
+    ``norm_scale`` the fused epilogue runs after the psum_scatter on the
+    seq shard each device owns — every residual row is full-N, so the
+    rmsnorm fold is always legal here — and the return is
+    ``(h_new, rmsnorm(h_new, norm_scale))``, both seq-sharded."""
+    from repro.kernels.epilogue import apply_epilogue
     mesh, model = ctx.mesh, ctx.model
+    cd = ctx.compute_dtype
+    fold = norm_scale is not None
+    ep = Epilogue(residual=True, norm="rmsnorm", norm_eps=norm_eps,
+                  out_dtype=cd) if fold else None
     if model == 1:
-        return xyz_matmul(x, w_xyz, mesh=mesh, cfg=XYZConfig(y=1))
+        return xyz_matmul(x, w_xyz, mesh=mesh,
+                          cfg=XYZConfig(y=1, epilogue=ep, out_dtype=cd),
+                          residual=residual, norm_scale=norm_scale)
     rs = _row_spec(x, ctx)
     x_spec = P(rs, None, "model" if x_layout == "ksharded" else None)
 
-    def body(xl, wl):
+    def body(xl, wl, *rest):
         wl = wl[0]
         md = jax.lax.axis_index("model")
         b, s, _ = xl.shape
@@ -155,17 +179,34 @@ def xyz_matmul_seq_scatter(x: jnp.ndarray, w_xyz: jnp.ndarray, *,
         from repro.kernels import ops as kops
         # 16-bit wire + AD buffers; the cast is fused into the kernel's
         # store phase (no fp32 round trip through HBM)
-        partial = kops.matmul(x2, wl, out_dtype=ctx.compute_dtype)
+        partial = kops.matmul(x2, wl, out_dtype=cd)
         partial = partial.reshape(b, s, -1)
-        return jax.lax.psum_scatter(partial, "model", scatter_dimension=1,
-                                    tiled=True)
+        out = jax.lax.psum_scatter(partial, "model", scatter_dimension=1,
+                                   tiled=True)
+        if not fold:
+            return out
+        res_l, ns_l = rest
+        b2, s2, n2 = out.shape
+        val, xn = apply_epilogue(out.reshape(b2 * s2, n2), ep,
+                                 residual=res_l.reshape(b2 * s2, n2),
+                                 norm_scale=ns_l)
+        return val.reshape(b2, s2, n2), xn.reshape(b2, s2, n2)
 
-    return _shard_map(body, mesh, (x_spec, P("model", None, None)),
-                      P(rs, "model", None))(x, w_xyz)
+    in_specs = [x_spec, P("model", None, None)]
+    args = [x, w_xyz]
+    out_spec = P(rs, "model", None)
+    if fold:
+        in_specs += [P(rs, "model", None), P(None)]
+        args += [residual, norm_scale]
+        out_spec = (out_spec, out_spec)
+    return _shard_map(body, mesh, tuple(in_specs), out_spec)(*args)
 
 
 def mlp_apply_fused_sp(params: Dict[str, jnp.ndarray], h_sharded: jnp.ndarray,
-                       ctx: TPCtx, gated: bool) -> jnp.ndarray:
+                       ctx: TPCtx, gated: bool,
+                       residual: Optional[jnp.ndarray] = None,
+                       norm_scale: Optional[jnp.ndarray] = None,
+                       norm_eps: float = 1e-6):
     """Whole Megatron-SP MLP in ONE shard_map: AG(x) -> up/gate (broadcast
     consumers) -> down partial -> psum_scatter over seq.
 
@@ -173,12 +214,24 @@ def mlp_apply_fused_sp(params: Dict[str, jnp.ndarray], h_sharded: jnp.ndarray,
     the AG's transpose (a reduce-scatter) instead of one all-reduce per
     consumer — measured -25% wire on gemma3 train (EXPERIMENTS §Perf).
     Requires up_y == 1 and down_y == model (the planner's choice for every
-    assigned arch's MLP)."""
+    assigned arch's MLP).
+
+    The gated MLP runs the ``silu(g) * u`` multiply as the up GEMM's
+    two-operand gate epilogue (the gate GEMM emits RAW g; the activation
+    happens once, in fp32, on the up accumulator).  With ``residual``
+    (seq-sharded stream) + ``norm_scale`` the residual add AND the next
+    block's rmsnorm fold into one elementwise chain after the
+    psum_scatter; returns ``(h_new, rmsnorm(h_new))``, both seq-sharded.
+    """
+    from repro.kernels.epilogue import apply_epilogue
     mesh, model = ctx.mesh, ctx.model
     rs = _row_spec(h_sharded, ctx)
     cd = ctx.compute_dtype
+    fold = norm_scale is not None
+    fold_ep = Epilogue(residual=True, norm="rmsnorm", norm_eps=norm_eps,
+                       out_dtype=cd) if fold else None
 
-    def body(xl, wu, wg, wd):
+    def body(xl, wu, wg, wd, *rest):
         x2 = jax.lax.all_gather(xl, "model", axis=1, tiled=True)
         b, s, _ = x2.shape
         xf = x2.reshape(b * s, -1)
@@ -186,30 +239,39 @@ def mlp_apply_fused_sp(params: Dict[str, jnp.ndarray], h_sharded: jnp.ndarray,
         # up/gate GEMMs carry their activation + cast in the fused
         # epilogue: the fp32 accumulator never round-trips through HBM
         if wg is not None:
+            g = kops.matmul(xf, wg[0], epilogue=Epilogue(out_dtype=cd))
             hcol = kops.matmul(xf, wu[0],
-                               epilogue=Epilogue(out_dtype=cd))
-            g = kops.matmul(xf, wg[0], epilogue=Epilogue(
-                activation="silu", out_dtype=cd))
-            hcol = g * hcol
+                               epilogue=Epilogue(gate="silu", out_dtype=cd),
+                               operand2=g)
         else:
             hcol = kops.matmul(xf, wu[0], epilogue=Epilogue(
                 activation="gelu", out_dtype=cd))
         part = kops.matmul(hcol, wd[0], out_dtype=cd)
         part = part.reshape(b, s, -1)
-        return jax.lax.psum_scatter(part, "model", scatter_dimension=1,
-                                    tiled=True)
+        out = jax.lax.psum_scatter(part, "model", scatter_dimension=1,
+                                   tiled=True)
+        if not fold:
+            return out
+        res_l, ns_l = rest
+        b2, s2, n2 = out.shape
+        val, xn = apply_epilogue(out.reshape(b2 * s2, n2), fold_ep,
+                                 residual=res_l.reshape(b2 * s2, n2),
+                                 norm_scale=ns_l)
+        return val.reshape(b2, s2, n2), xn.reshape(b2, s2, n2)
 
     wspec = P("model", None, None)
-    if gated:
-        return _shard_map(
-            body, mesh, (P(rs, "model", None), wspec, wspec, wspec),
-            P(rs, "model", None),
-        )(h_sharded, params["up"], params["gate"], params["down"])
-    return _shard_map(
-        lambda xl, wu, wd: body(xl, wu, None, wd), mesh,
-        (P(rs, "model", None), wspec, wspec),
-        P(rs, "model", None),
-    )(h_sharded, params["up"], params["down"])
+    sspec = P(rs, "model", None)
+    in_specs = [sspec, wspec, wspec, wspec] if gated \
+        else [sspec, wspec, wspec]
+    args = [h_sharded, params["up"], params["gate"], params["down"]] \
+        if gated else [h_sharded, params["up"], params["down"]]
+    out_spec = (sspec, sspec) if fold else sspec
+    if fold:
+        in_specs += [sspec, P(None)]
+        args += [residual, norm_scale]
+    fn = body if gated else (
+        lambda xl, wu, wd, *rest: body(xl, wu, None, wd, *rest))
+    return _shard_map(fn, mesh, tuple(in_specs), out_spec)(*args)
 
 
 # ---------------------------------------------------------------------------
@@ -268,18 +330,28 @@ def mlp_defs(d_model: int, d_ff: int, model: int, gated: bool, dtype: str,
 
 
 def _mlp_apply_int8(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
-                    ctx: TPCtx, gated: bool) -> jnp.ndarray:
+                    ctx: TPCtx, gated: bool,
+                    residual: Optional[jnp.ndarray] = None,
+                    norm_scale: Optional[jnp.ndarray] = None,
+                    norm_eps: float = 1e-6):
     """Single-shard int8 MLP (the serving path, weights quantized
     column-wise by ``Model.quantize_params_for_serving``).
 
     ONE rowwise quantize of the normed stream feeds both the up and gate
     int8 GEMMs (the broadcast input is quantized once, never per
-    consumer).  For the plain-GELU MLP the up GEMM's fused epilogue emits
-    the ``(q, scale)`` pair the down GEMM consumes DIRECTLY — a
-    GEMM -> GEMM int8 handoff whose int32 -> fp32 boundary lives entirely
-    inside the kernels' store phases (zero fp dequant -> requant bounce).
-    The gated MLP's two-operand ``silu(g) * u`` multiply runs in the
-    compute dtype and is requantized in the same fused elementwise chain.
+    consumer).  BOTH MLP shapes hand the down GEMM a fused ``(q, scale)``
+    pair straight out of the up GEMM's store phase: plain-GELU via the
+    ``activation='gelu'`` quantize epilogue, gated via the two-operand
+    ``gate='silu'`` epilogue (``silu(g) * u`` on the fp32 accumulator —
+    the gate GEMM emits RAW g, the multiply and requantize never leave
+    the fused elementwise chain).  The int32 -> fp32 boundary lives
+    entirely inside the kernels' store phases: zero standalone rowwise
+    quantizes after the input one, zero fp dequant -> requant bounces
+    (both contract-audited in the traced decode/prefill HLO).
+
+    With ``residual`` + ``norm_scale`` the down GEMM additionally folds
+    the residual add and the NEXT block's rmsnorm, returning
+    ``(h_new, rmsnorm(h_new, norm_scale))``.
     """
     assert ctx.model == 1, "int8 serving path is single-shard"
     from repro.kernels import ops as kops
@@ -288,40 +360,65 @@ def _mlp_apply_int8(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
     x2 = x.reshape(-1, x.shape[-1])
     qx, sx = kops.quantize_rowwise(x2)
     if gated:
-        h = kops.int8_matmul(qx, sx, *params["up"].as_matrix(),
-                             out_dtype=cd)
         g = kops.int8_matmul(qx, sx, *params["gate"].as_matrix(),
-                             epilogue=Epilogue(activation="silu",
-                                               out_dtype=cd))
-        qh, sh = kops.quantize_rowwise(g * h)
+                             out_dtype=cd)
+        qh, sh = kops.int8_matmul(qx, sx, *params["up"].as_matrix(),
+                                  epilogue=Epilogue(gate="silu",
+                                                    quantize=True),
+                                  operand2=g)
     else:
         qh, sh = kops.int8_matmul(qx, sx, *params["up"].as_matrix(),
                                   epilogue=Epilogue(activation="gelu",
                                                     quantize=True))
+    if norm_scale is not None:
+        ep = Epilogue(residual=True, norm="rmsnorm", norm_eps=norm_eps,
+                      out_dtype=cd)
+        val, xn = kops.int8_matmul(
+            qh, sh, *params["down"].as_matrix(), epilogue=ep,
+            residual=residual.reshape(-1, residual.shape[-1]),
+            norm_scale=norm_scale)
+        return (val.reshape(*lead, -1), xn.reshape(*lead, -1))
     out = kops.int8_matmul(qh, sh, *params["down"].as_matrix(),
                            out_dtype=cd)
     return out.reshape(*lead, -1)
 
 
 def mlp_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
-              ctx: TPCtx, gated: bool) -> jnp.ndarray:
+              ctx: TPCtx, gated: bool,
+              residual: Optional[jnp.ndarray] = None,
+              norm_scale: Optional[jnp.ndarray] = None,
+              norm_eps: float = 1e-6):
     """x: replicated-over-model activations [B, S, D] (already gathered if
     SP).  Returns activations matching the residual-stream sharding:
-    seq-sharded under active SP, replicated otherwise."""
+    seq-sharded under active SP, replicated otherwise.
+
+    With ``residual`` (the residual stream, in stream sharding) and
+    ``norm_scale`` (the NEXT norm's scale param) the down projection
+    folds the residual add and the next rmsnorm into its epilogue and
+    returns ``(h_new, rmsnorm(h_new, norm_scale))`` — eliminating one
+    full residual-stream read + write per block.  The fold runs fused on
+    every full-N down path (seq-scatter SP, replicated-out, model == 1,
+    int8 serving); the general Y < model path (N-sharded output) cannot
+    hold a full row and composes the same math standalone."""
     from repro.kernels.quantize import QuantizedWeight
+    fold = norm_scale is not None
     if isinstance(params["up"], QuantizedWeight):
-        return _mlp_apply_int8(params, x, ctx, gated)
+        return _mlp_apply_int8(params, x, ctx, gated, residual=residual,
+                               norm_scale=norm_scale, norm_eps=norm_eps)
     model = ctx.model
     cd = ctx.compute_dtype
     up_cfg = XYZConfig(y=ctx.up_y, schedule=ctx.down_schedule, out_dtype=cd)
     if gated:
-        # silu fuses into the gate GEMM's store phase; with up_y == 1 it
-        # runs on the fp32 VMEM accumulator tile inside the kernel
-        h = xyz_matmul(x, params["up"], mesh=ctx.mesh, cfg=up_cfg)
+        # two-operand gate epilogue: the gate GEMM emits RAW g and the up
+        # GEMM's store phase computes silu(g) * u on the fp32 accumulator
+        # (with up_y == 1 on the VMEM tile inside the kernel; with
+        # up_y > 1 post-reduction inside the shard_map — elementwise, so
+        # bitwise schedule-invariant)
+        g = xyz_matmul(x, params["gate"], mesh=ctx.mesh, cfg=up_cfg)
         gate_cfg = dataclasses.replace(up_cfg, epilogue=Epilogue(
-            activation="silu", out_dtype=cd))
-        g = xyz_matmul(x, params["gate"], mesh=ctx.mesh, cfg=gate_cfg)
-        h = g * h
+            gate="silu", out_dtype=cd))
+        h = xyz_matmul(x, params["up"], mesh=ctx.mesh, cfg=gate_cfg,
+                       operand2=g)
     else:
         up_fused = dataclasses.replace(up_cfg, epilogue=Epilogue(
             activation="gelu", out_dtype=cd))
@@ -330,17 +427,33 @@ def mlp_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
     down_y = ctx.down_y or model
     if _sp_active(x, ctx) and down_y == model:
         # adder tree + sequence scatter fused in one psum_scatter
-        return xyz_matmul_seq_scatter(h, params["down"], ctx=ctx,
-                                      x_layout="ksharded")
+        return xyz_matmul_seq_scatter(
+            h, params["down"], ctx=ctx, x_layout="ksharded",
+            residual=residual if fold else None,
+            norm_scale=norm_scale, norm_eps=norm_eps)
+    fold_ep = Epilogue(residual=True, norm="rmsnorm", norm_eps=norm_eps,
+                       out_dtype=cd) if fold else None
     cfg = XYZConfig(y=down_y, schedule=ctx.down_schedule,
-                    x_layout="ksharded", out_dtype=ctx.compute_dtype)
+                    x_layout="ksharded", out_dtype=cd)
     if down_y == model:
+        if fold:
+            return xyz_matmul_replicated_out(
+                h, params["down"], mesh=ctx.mesh,
+                cfg=dataclasses.replace(cfg, epilogue=fold_ep),
+                residual=residual, norm_scale=norm_scale)
         out = xyz_matmul_replicated_out(h, params["down"], mesh=ctx.mesh,
                                         cfg=cfg)
     else:
         # general Y < model: output lands N-sharded; gather to replicated
         out = xyz_matmul(h, params["down"], mesh=ctx.mesh, cfg=cfg)
         out = gather_last_dim(out, ctx)
+        if fold:
+            # no full-N shard exists pre-gather: compose the identical
+            # math standalone (same fp32 add, same rmsnorm)
+            out = scatter_seq(out, ctx)
+            hf = residual.astype(jnp.float32) + out.astype(jnp.float32)
+            h_new = hf.astype(cd)
+            return h_new, rmsnorm(h_new, norm_scale, norm_eps)
     return scatter_seq(out, ctx)
 
 

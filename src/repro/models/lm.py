@@ -218,13 +218,18 @@ class Model:
             return cfg.rope_theta_global
         return cfg.rope_theta
 
-    def _block(self, btype: str, bp, h, *, positions, mode, cache, pos,
-               enc_out, prefix_len, q_chunk=512, page_table=None):
-        """h: residual stream (seq-sharded under SP). Returns
-        (h, new_cache, aux)."""
+    def _block(self, btype: str, bp, h, xn, next_scale, *, positions,
+               mode, cache, pos, enc_out, prefix_len, q_chunk=512,
+               page_table=None):
+        """h: residual stream (seq-sharded under SP); xn: this block's
+        input norm ``rmsnorm(h, bp["ln1"])``, PRE-COMPUTED — by the
+        previous block's rmsnorm-fused down projection, or by the entry
+        norm for the first block; next_scale: the NEXT norm's scale
+        (the following block's ln1, or final_norm) whose rmsnorm folds
+        into this block's MLP down epilogue together with the residual
+        add.  Returns (h, xn_next, new_cache, aux)."""
         cfg, ctx = self.cfg, self.ctx
         aux = jnp.zeros((), jnp.float32)
-        xn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
         # fused-QKV path consumes the SP-sharded stream directly (the
         # gather happens inside one shard_map; backward is RS, not AR)
         fuse_qkv = (btype in _ATTN_KINDS and mode not in ("decode", "paged")
@@ -282,19 +287,30 @@ class Model:
             h = h + (xout if xps else scatter_seq(xout, ctx))
 
         if cfg.d_ff > 0:
-            xn = rmsnorm(h, bp["ln2"], cfg.norm_eps)
+            xn2 = rmsnorm(h, bp["ln2"], cfg.norm_eps)
             if cfg.moe:
-                y, aux = moe_apply(bp["ffn"], gather_seq(xn, ctx), cfg, ctx)
-                y = scatter_seq(y, ctx)
-            elif _sp_active(xn, ctx) and ctx.up_y == 1 \
+                # routed einsum path: no GEMM epilogue to fold into —
+                # residual add + next norm compose standalone
+                y, aux = moe_apply(bp["ffn"], gather_seq(xn2, ctx), cfg,
+                                   ctx)
+                h = h + scatter_seq(y, ctx)
+                xn_next = rmsnorm(h, next_scale, cfg.norm_eps)
+            elif _sp_active(xn2, ctx) and ctx.up_y == 1 \
                     and (ctx.down_y or ctx.model) == ctx.model:
                 from repro.models.layers import mlp_apply_fused_sp
-                y = mlp_apply_fused_sp(bp["ffn"], xn, ctx, cfg.gated_mlp)
+                h, xn_next = mlp_apply_fused_sp(
+                    bp["ffn"], xn2, ctx, cfg.gated_mlp, residual=h,
+                    norm_scale=next_scale, norm_eps=cfg.norm_eps)
             else:
-                y = mlp_apply(bp["ffn"], gather_seq(xn, ctx), ctx,
-                              cfg.gated_mlp)
-            h = h + y
-        return h, new_cache, aux
+                h, xn_next = mlp_apply(
+                    bp["ffn"], gather_seq(xn2, ctx), ctx, cfg.gated_mlp,
+                    residual=h, norm_scale=next_scale,
+                    norm_eps=cfg.norm_eps)
+        else:
+            # xLSTM-style block without an FFN sub-block: no down GEMM,
+            # the next input norm runs standalone
+            xn_next = rmsnorm(h, next_scale, cfg.norm_eps)
+        return h, xn_next, new_cache, aux
 
     def _prefill_attention(self, ap, x, btype, positions, prefix_len,
                            empty_cache, q_chunk, x_seq_sharded=False):
@@ -399,8 +415,9 @@ class Model:
         pattern = cfg.block_pattern
         remat = mode == "train" and cfg.remat != "none"
 
-        def one_block(bt, hh, bp, gc):
-            return self._block(bt, bp, hh, positions=positions, mode=mode,
+        def one_block(bt, hh, xn, bp, nscale, gc):
+            return self._block(bt, bp, hh, xn, nscale,
+                               positions=positions, mode=mode,
                                cache=gc, pos=pos, enc_out=enc_out,
                                prefix_len=prefix_len,
                                page_table=page_table)
@@ -411,33 +428,64 @@ class Model:
             # measured 45 GB/device on gemma3; see EXPERIMENTS §Perf).
             one_block = jax.checkpoint(one_block, static_argnums=(0,))
 
+        # rmsnorm-fused down projections: each block's MLP epilogue emits
+        # the NEXT block's input norm, so the residual stream never takes
+        # the extra read + write between blocks.  The entry norm (first
+        # block) is the single standalone input norm left; inside the
+        # group scan the "next" ln1 is the SHIFTED ln1 stack (next
+        # iteration's b0), closed by the first tail block's ln1 or
+        # final_norm.
+        if cfg.n_groups > 0:
+            first_scale = params["groups"]["b0"]["ln1"][0]
+        elif cfg.tail_blocks:
+            first_scale = params["tail"]["t0"]["ln1"]
+        else:
+            first_scale = None
+        xn = (rmsnorm(h, first_scale, cfg.norm_eps)
+              if first_scale is not None else None)
+
         def group_body(carry, xs):
-            hh = carry
-            gp, gcache = xs if cache is not None else (xs, None)
+            hh, xnc = carry
+            if cache is not None:
+                gp, ln1_nxt, gcache = xs
+            else:
+                (gp, ln1_nxt), gcache = xs, None
             new_gc = {}
             aux_t = jnp.zeros((), jnp.float32)
             for i, bt in enumerate(pattern):
-                hh, nc, aux = one_block(
-                    bt, hh, gp[f"b{i}"],
+                nscale = (gp[f"b{i + 1}"]["ln1"]
+                          if i + 1 < len(pattern) else ln1_nxt)
+                hh, xnc, nc, aux = one_block(
+                    bt, hh, xnc, gp[f"b{i}"], nscale,
                     gcache[f"b{i}"] if gcache is not None else None)
                 new_gc[f"b{i}"] = nc
                 aux_t = aux_t + aux
-            return hh, (new_gc, aux_t)
+            return (hh, xnc), (new_gc, aux_t)
 
         aux_total = jnp.zeros((), jnp.float32)
         new_cache: Dict[str, Any] = {}
         if cfg.n_groups > 0:
-            xs = (params["groups"], cache["groups"]) if cache is not None \
-                else params["groups"]
-            h, (gcaches, auxs) = jax.lax.scan(group_body, h, xs)
+            after_groups = (params["tail"]["t0"]["ln1"] if cfg.tail_blocks
+                            else params["final_norm"])
+            ln1_stack = params["groups"]["b0"]["ln1"]       # [G, D] f32
+            ln1_next = jnp.concatenate(
+                [ln1_stack[1:], after_groups.astype(ln1_stack.dtype)[None]],
+                axis=0)
+            xs = (params["groups"], ln1_next, cache["groups"]) \
+                if cache is not None else (params["groups"], ln1_next)
+            (h, xn), (gcaches, auxs) = jax.lax.scan(group_body, (h, xn),
+                                                    xs)
             aux_total = aux_total + jnp.sum(auxs)
             if cache is not None or mode == "prefill":
                 new_cache["groups"] = gcaches
 
         tail_caches = {}
         for i, bt in enumerate(cfg.tail_blocks):
-            h, nc, aux = one_block(
-                bt, h, params["tail"][f"t{i}"],
+            nscale = (params["tail"][f"t{i + 1}"]["ln1"]
+                      if i + 1 < len(cfg.tail_blocks)
+                      else params["final_norm"])
+            h, xn, nc, aux = one_block(
+                bt, h, xn, params["tail"][f"t{i}"], nscale,
                 cache["tail"][f"t{i}"] if cache is not None else None)
             tail_caches[f"t{i}"] = nc
             aux_total = aux_total + aux
@@ -447,7 +495,9 @@ class Model:
                 new_cache["enc_out"] = (cache["enc_out"] if mode == "decode"
                                         else enc_out)
 
-        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        # the last block's fold already produced rmsnorm(h, final_norm)
+        h = (xn if first_scale is not None
+             else rmsnorm(h, params["final_norm"], cfg.norm_eps))
         return h, new_cache, aux_total
 
     # -- entry points -----------------------------------------------------------

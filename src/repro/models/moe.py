@@ -144,7 +144,11 @@ def moe_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
     h = jnp.einsum("xecd,edf->xecf", xe, params["w_up"].astype(cd))
     if cfg.gated_mlp:
         g = jnp.einsum("xecd,edf->xecf", xe, params["w_gate"].astype(cd))
-        h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * h
+        # einsum expert path: the gate multiply cannot ride a GEMM
+        # epilogue here; tag it so the fusion audit sees a deliberate
+        # unfused site rather than a regression
+        with jax.named_scope("gate_mul_unfused"):
+            h = jax.nn.silu(g.astype(jnp.float32)).astype(cd) * h
     else:
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(cd)
     h = constrain(h, ctx.mesh, hspec)
@@ -162,7 +166,8 @@ def moe_apply(params: Dict[str, jnp.ndarray], x: jnp.ndarray,
         if cfg.gated_mlp:
             gs = jnp.einsum("xnd,df->xnf", xt,
                             params["shared_gate"].astype(cd))
-            hs = jax.nn.silu(gs.astype(jnp.float32)).astype(cd) * hs
+            with jax.named_scope("gate_mul_unfused"):
+                hs = jax.nn.silu(gs.astype(jnp.float32)).astype(cd) * hs
         else:
             hs = jax.nn.gelu(hs.astype(jnp.float32)).astype(cd)
         out = out + jnp.einsum("xnf,fd->xnd", hs,

@@ -76,7 +76,7 @@ def check_schedule_equivalence_epilogue():
     full one runs under pytest -m multidev)."""
     import _schedule_sweep as sweep
     mesh = make_mesh()
-    for ep_name in ("bias_gelu_residual", "quantize"):
+    for ep_name in ("bias_gelu_residual", "quantize", "gate_silu"):
         for layout in ("replicated", "ksharded"):
             for y in (2, 4):
                 sweep.run_combo(mesh, y=y, layout=layout, ep_name=ep_name,

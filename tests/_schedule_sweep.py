@@ -56,6 +56,11 @@ EPILOGUES = {
     "bias_gelu_residual": Epilogue(bias=True, activation="gelu",
                                    residual=True),
     "quantize": Epilogue(activation="silu", quantize=True),
+    # v2 two-operand gate: silu(g) * u on the accumulator; with Y > 1
+    # the gate applies post-reduction inside the shard_map (elementwise,
+    # so the bitwise schedule-invariance contract must keep holding)
+    "gate_silu": Epilogue(gate="silu"),
+    "gate_silu_residual": Epilogue(gate="silu", residual=True),
 }
 
 
@@ -65,19 +70,20 @@ def make_mesh():
 
 
 def _data(b, s, k, n, seed):
-    kx, kw, kb, kr = jax.random.split(jax.random.PRNGKey(seed), 4)
+    kx, kw, kb, kr, kg = jax.random.split(jax.random.PRNGKey(seed), 5)
     x = jax.random.normal(kx, (b, s, k), jnp.float32)
     w = jax.random.normal(kw, (k, n), jnp.float32) / np.sqrt(k)
     bias = jax.random.normal(kb, (n,), jnp.float32)
     res = jax.random.normal(kr, (b, s, n), jnp.float32)
-    return x, w, bias, res
+    op2 = jax.random.normal(kg, (b, s, n), jnp.float32)
+    return x, w, bias, res, op2
 
 
 def _flat(out):
     return list(out) if isinstance(out, tuple) else [out]
 
 
-def _oracle_check(ep_name, ep, outs, x, w, bias, res, tag):
+def _oracle_check(ep_name, ep, outs, x, w, bias, res, op2, tag):
     """(b): the swept result matches the unsharded einsum + shared
     ``apply_epilogue`` mirror within fp32 tolerance."""
     from repro.kernels.epilogue import apply_epilogue
@@ -103,7 +109,8 @@ def _oracle_check(ep_name, ep, outs, x, w, bias, res, tag):
                 (tag, c)
         return
     want = apply_epilogue(base, ep, bias=bias if ep.bias else None,
-                          residual=res if ep.residual else None)
+                          residual=res if ep.residual else None,
+                          operand2=op2 if ep.gate != "none" else None)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5, err_msg=tag)
 
@@ -115,13 +122,15 @@ def run_combo(mesh, *, y, layout, ep_name, schedules=None,
     b, s, k, n = shape
     schedules = list(schedules or SCHEDULES)
     ep = EPILOGUES[ep_name]
-    x, w, bias, res = _data(b, s, k, n, seed)
+    x, w, bias, res, op2 = _data(b, s, k, n, seed)
     w_xyz = shard_weight_xyz(w, MODEL, y)
     kwargs = {}
     if ep is not None and ep.bias:
         kwargs["bias"] = bias
     if ep is not None and ep.residual:
         kwargs["residual"] = res
+    if ep is not None and ep.gate != "none":
+        kwargs["operand2"] = op2
 
     outs = {}
     for sched in schedules:
@@ -145,7 +154,7 @@ def run_combo(mesh, *, y, layout, ep_name, schedules=None,
     # (b) oracle
     ref_out = outs[ref_sched]
     _oracle_check(ep_name, ep, tuple(ref_out) if len(ref_out) > 1
-                  else ref_out[0], x, w, bias, res, tag)
+                  else ref_out[0], x, w, bias, res, op2, tag)
     print(f"ok equiv[{tag} schedules={','.join(schedules)}]")
     return outs
 

@@ -286,6 +286,53 @@ def test_bounce_detector_trips_on_deliberate_bounce():
     assert int8_bounce_count(hlo2) == 0
 
 
+def test_int8_gated_mlp_fused_handoff_hlo(mesh):
+    """The gated int8 MLP's fused (q, scale) handoff, proven in traced
+    HLO: exactly ONE standalone rowwise quantize (the shared input — the
+    up GEMM's requantize lives in its store phase), zero fp dequant ->
+    requant bounces between the up and down GEMMs, no unfused
+    ``silu(g) * u`` multiply, and the down GEMM's residual + rmsnorm
+    fold is the module's only norm (fused, not standalone)."""
+    from repro.analysis.hlo_graph import parse_hlo
+    from repro.analysis.passes import run_passes
+    from repro.models.layers import TPCtx, _mlp_apply_int8
+
+    d, dff = 64, 96
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    params = {
+        "gate": quantize_weight_colwise(
+            jax.random.normal(keys[0], (d, dff), jnp.float32) / 8),
+        "up": quantize_weight_colwise(
+            jax.random.normal(keys[1], (d, dff), jnp.float32) / 8),
+        "down": quantize_weight_colwise(
+            jax.random.normal(keys[2], (dff, d), jnp.float32) / 8),
+    }
+    x = jax.random.normal(keys[3], (4, d), jnp.bfloat16)
+    res = jax.random.normal(keys[4], (4, d), jnp.bfloat16)
+    nsc = jnp.zeros((d,), jnp.float32)
+    ctx = TPCtx(mesh=make_mesh(1, 1), sp=False)
+
+    def f(params, x, res, nsc):
+        return _mlp_apply_int8(params, x, ctx, True, residual=res,
+                               norm_scale=nsc)
+
+    hlo = jax.jit(f).lower(params, x, res, nsc).compile().as_text()
+    # dtype flow: no fp32 bounce anywhere; the only GEMMs at the d_ff
+    # width are the gate and up dispatches (the requantize is fused)
+    assert int8_bounce_count(hlo) == 0
+    assert gemm_dispatches(hlo, dff) == 2
+    findings, metrics = run_passes(parse_hlo(hlo), dict(
+        expect_standalone_rmsnorm=0,
+        forbid_unfused_gate_mul=True,
+        expect_standalone_quantize=1))
+    errors = [fi for fi in findings if fi.severity == "error"]
+    assert not errors, [fi.format() for fi in errors]
+    assert metrics["standalone_quantize_sites"] == 1
+    assert metrics["unfused_gate_mul_sites"] == 0
+    assert metrics["standalone_rmsnorm_sites"] == 0
+    assert metrics["fused_rmsnorm_sites"] == 1
+
+
 # ---------------------------------------------------------------------------
 # serving engine integration
 # ---------------------------------------------------------------------------

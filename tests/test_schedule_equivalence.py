@@ -35,7 +35,8 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _SWEEP = os.path.join(_ROOT, "tests", "_schedule_sweep.py")
 
 LAYOUTS = ("replicated", "ksharded")
-EPILOGUES = ("none", "bias_gelu", "bias_gelu_residual", "quantize")
+EPILOGUES = ("none", "bias_gelu", "bias_gelu_residual", "quantize",
+             "gate_silu", "gate_silu_residual")
 
 
 def _run_sweep(*args):
